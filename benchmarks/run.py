@@ -1,0 +1,42 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table5,table7]
+
+Prints ``name,us_per_call,derived`` CSV. EXPERIMENTS.md maps every row to
+the paper table it reproduces and the claim it validates.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated prefixes, e.g. table5,fig2")
+    args = ap.parse_args()
+    from benchmarks import tables
+    only = [s for s in args.only.split(",") if s]
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in tables.ALL:
+        if only and not any(fn.__name__.startswith(p) for p in only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            fn()
+        except Exception:        # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{fn.__name__},0.0,ERROR", flush=True)
+        print(f"# {fn.__name__} took {time.perf_counter()-t0:.1f}s",
+              file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

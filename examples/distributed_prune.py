@@ -1,0 +1,58 @@
+"""Distributed CORP: the statistics passes under pjit on a device mesh.
+
+Runs the same one-shot pipeline on a (2,4) data x model mesh of 8 host
+devices and verifies the pruned weights are bit-consistent with the
+single-device result — the property that lets one calibration pass prune a
+671B model on 512 chips (DESIGN.md §2.1).
+
+NOTE: must run as its own process (device count is fixed at jax init):
+    PYTHONPATH=src python examples/distributed_prune.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.core import PruneConfig, corp_prune  # noqa: E402
+from repro.launch.mesh import make_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def main():
+    cfg = reduced(get_config("deit-base")).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    def calib():
+        for i in range(4):
+            yield {"images": jax.random.normal(
+                jax.random.PRNGKey(i),
+                (8, cfg.img_size, cfg.img_size, 3))}
+
+    pc = PruneConfig(0.5, 0.5)
+    print("== single device ==")
+    p1, c1, _ = corp_prune(model, params, calib, pc, progress=print)
+
+    mesh = make_mesh((2, 4))
+    print(f"== mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} ==")
+    with mesh:
+        p2, c2, _ = corp_prune(model, params, calib, pc, progress=print)
+
+    diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                     - b.astype(jnp.float32))))
+               for a, b in zip(jax.tree.leaves(p1),
+                               jax.tree.leaves(jax.device_get(p2))))
+    print(f"max |single - mesh| over all pruned weights: {diff:.2e}")
+    assert diff < 1e-3
+    print("distributed CORP == single-device CORP  [OK]")
+
+
+if __name__ == "__main__":
+    main()

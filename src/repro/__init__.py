@@ -1,0 +1,18 @@
+"""repro: production-grade JAX framework implementing CORP
+(Closed-Form One-shot Representation-Preserving Structured Pruning).
+
+Layers:
+  repro.kernels   - Pallas TPU kernels (flash attention, gram accumulation, wkv6)
+  repro.models    - composable transformer model zoo (dense / GQA / MLA / MoE /
+                    RWKV6 / Mamba-hybrid / enc-dec / ViT)
+  repro.core      - the paper's contribution: distributed calibration statistics,
+                    ranking, closed-form compensation, weight folding
+  repro.data      - deterministic sharded synthetic data pipeline
+  repro.optim     - AdamW + schedules (ZeRO-shardable state)
+  repro.checkpoint- atomic async checkpointing / restart
+  repro.distrib   - sharding rules, fault tolerance runtime
+  repro.launch    - mesh, dry-run, train, serve, prune drivers
+  repro.roofline  - roofline analysis from compiled artifacts
+"""
+
+__version__ = "1.0.0"

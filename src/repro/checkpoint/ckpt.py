@@ -1,0 +1,161 @@
+"""Atomic, restartable checkpointing.
+
+Layout: <dir>/step_<n>/arrays.npz + manifest.json (tree structure + integrity
+hash). Writes go to a tmp directory renamed into place (atomic on POSIX), so
+a host dying mid-save can never produce a half-written "latest" checkpoint —
+``latest_step`` skips incomplete/corrupt steps. ``AsyncCheckpointer``
+serializes from host snapshots on a background thread so the train loop
+never blocks on disk.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+           "int8", "uint64", "uint32", "uint16", "uint8", "bool",
+           "complex64", "complex128"}
+
+_RAW_VIEW = {2: np.uint16, 1: np.uint8, 4: np.uint32}
+
+
+def _flatten(tree):
+    """Flatten to {path: ndarray}; extended dtypes (bfloat16, fp8) stored as
+    raw uint views with the true dtype recorded in the companion dict."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out, dtypes = {}, {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        a = np.asarray(leaf)
+        if a.dtype.name not in _NATIVE:
+            dtypes[path] = a.dtype.name
+            a = a.view(_RAW_VIEW[a.dtype.itemsize])
+        out[path] = a
+    return out, dtypes
+
+
+def _unflatten_into(tree, arrays, dtypes):
+    import ml_dtypes
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        a = arrays[path]
+        if path in dtypes:
+            a = a.view(np.dtype(getattr(ml_dtypes, dtypes[path])))
+        assert a.shape == leaf.shape, f"{path}: {a.shape} != {leaf.shape}"
+        if a.dtype.name != str(np.dtype(leaf.dtype)):
+            a = a.astype(leaf.dtype)
+        leaves.append(a)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, extra: dict | None
+                    = None) -> str:
+    """Atomic save. Returns the final step directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays, dtypes = _flatten(jax.device_get(tree))
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **arrays)
+    digest = hashlib.sha256(open(npz_path, "rb").read()).hexdigest()
+    manifest = {"step": step, "sha256": digest, "dtypes": dtypes,
+                "n_arrays": len(arrays), "extra": extra or {}}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _valid(step_dir: str) -> bool:
+    man = os.path.join(step_dir, "manifest.json")
+    npz = os.path.join(step_dir, "arrays.npz")
+    if not (os.path.exists(man) and os.path.exists(npz)):
+        return False
+    try:
+        m = json.load(open(man))
+        digest = hashlib.sha256(open(npz, "rb").read()).hexdigest()
+        return digest == m["sha256"]
+    except Exception:
+        return False
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step with a *valid* checkpoint (corrupt/partial skipped)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                s = int(name.split("_")[1])
+            except ValueError:
+                continue
+            if _valid(os.path.join(ckpt_dir, name)):
+                steps.append(s)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like: Any):
+    """Restore into the structure (and dtypes) of ``like``."""
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    arrays = {k: data[k] for k in data.files}
+    manifest = json.load(open(os.path.join(step_dir, "manifest.json")))
+    return (_unflatten_into(like, arrays, manifest.get("dtypes", {})),
+            manifest["extra"])
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing from host snapshots."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[Exception] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            raise self.last_error
+
+    def save(self, step: int, tree: Any, extra: dict | None = None):
+        self.wait()
+        snapshot = jax.device_get(tree)   # snapshot before returning
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, step, snapshot, extra)
+                self._gc()
+            except Exception as e:      # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)

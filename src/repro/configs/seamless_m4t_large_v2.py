@@ -1,0 +1,26 @@
+"""seamless-m4t-large-v2 [audio] — encoder-decoder, multimodal. [arXiv:2308.11596; hf]
+
+Audio frontend is a STUB: ``input_specs()`` provides precomputed frame
+embeddings consumed by the encoder. 24 encoder + 24 decoder layers share the
+assigned backbone dims.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,           # decoder layers
+    n_enc_layers=24,
+    cross_attend=True,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=64,
+    d_ff=8192,
+    vocab_size=256206,
+    act="relu2",
+    mlp_kind="plain",
+    norm_kind="layernorm",
+    rope_theta=1e4,
+    frontend="frame_stub",
+)

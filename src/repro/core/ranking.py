@@ -1,0 +1,54 @@
+"""Ranking policies (paper §3.3, Alg. 2/4, appendix E).
+
+MLP channels:
+  'act'      E_i = E[x_i^2]                 (activation energy)
+  'mag'      ||W_{:,i}||_2                  (second-matrix column norm)
+  'combined' E_i * ||W_{:,i}||_2            (default — best in the paper)
+  'active'   P(|x_i| > eps)                 (activation frequency)
+
+Attention head dims (per kv group): logit energy s_j = E[||q_j||^2 ||k_j||^2]
+(accumulated in pass 1; complex-pair energies for rope archs).
+
+Selection returns sorted kept/pruned index arrays; all scores are reduced on
+host (numpy) — they are tiny compared to the statistics themselves.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+POLICIES = ("act", "mag", "combined", "active")
+
+
+def _select(scores: np.ndarray, keep_n: int):
+    """scores: (..., F) -> kept (..., keep_n), pruned (..., F-keep_n), sorted."""
+    order = np.argsort(-scores, axis=-1, kind="stable")
+    keep = np.sort(order[..., :keep_n], axis=-1)
+    prune = np.sort(order[..., keep_n:], axis=-1)
+    return keep.astype(np.int32), prune.astype(np.int32)
+
+
+def mlp_scores(stats, w2, policy: str = "combined") -> np.ndarray:
+    """stats: pass-1 moments (possibly stacked / per-expert); w2: matching
+    second-matrix array with orientation (..., F, D)."""
+    n = np.maximum(np.asarray(stats["n"], np.float64), 1.0)
+    e = np.einsum("...ff->...f", np.asarray(stats["s2"], np.float64))
+    e = e / n[..., None]
+    if policy == "act":
+        return e
+    col = np.linalg.norm(np.asarray(w2, np.float64), axis=-1)   # (..., F)
+    if policy == "mag":
+        return col
+    if policy == "combined":
+        return e * col
+    if policy == "active":
+        return np.asarray(stats["na"], np.float64) / n[..., None]
+    raise ValueError(policy)
+
+
+def rank_mlp(stats, w2, keep_n: int, policy: str = "combined"):
+    return _select(mlp_scores(stats, w2, policy), keep_n)
+
+
+def rank_attn(stats, keep_n: int):
+    """stats['rank']: (..., G, d or d/2 pairs) energy products."""
+    return _select(np.asarray(stats["rank"], np.float64), keep_n)

@@ -1,0 +1,155 @@
+"""Closed-form CORP solvers (paper §3.4, App. B) and weight folds.
+
+MLP affine compensation (Eq. 9):
+    B = Sigma_PS (Sigma_SS + lam I)^-1,   c = mu_P - B mu_S
+
+Attention logit compensation:
+  class 1 (paper Eq. 15, no rope / no qk-norm):
+    [ sum_b (K_S^T K_S) (x) (Q_S^T Q_S) + lam I ] vec(M) = sum_b vec((Q_S^T Q_P)(K_P^T K_S))
+    fold I + M = U S V^T into W_Q U S^{1/2}, W_K V S^{1/2} (Eq. 16).
+  class 2 (rope): M restricted to a diagonal *complex* per-rotary-pair
+    compensator m (the only family that commutes with rotary phase), solved
+    from the Hadamard-reduced normal equations
+        (sum_b A_S (.) C_S^T + lam I) m = sum_b diag(A_SP C_PS),
+    A = Q^H Q, C = K^H K over complex pairs; folded as per-pair 2x2
+    rotation-scaling blocks a = sqrt(rho) e^{i phi/2} into W_Q and
+    b = sqrt(rho) e^{-i phi/2} into W_K (a * conj(b) = 1 + m).
+  class 3 (rope + qk-norm): real positive-diagonal restriction of class 2,
+    folded into the qk-norm scale vectors.
+
+All solvers return diagnostics: the closed-form distortion terms J* and the
+compensation gain (paper Eqs. 11, 17, 64, 92) — available "for free" from the
+same matrices.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# MLP affine compensation
+# ---------------------------------------------------------------------------
+
+def mlp_cov(stats):
+    """stats: {'n','s1','s2'} -> (mu, Sigma) fp64-free fp32."""
+    n = jnp.maximum(stats["n"], 1.0)
+    mu = stats["s1"] / n
+    sigma = stats["s2"] / n - jnp.outer(mu, mu)
+    return mu, sigma
+
+
+def ridge_affine(mu, sigma, keep, prune, lam: float):
+    """Closed-form (B, c) of Eq. 9 plus distortion diagnostics.
+
+    keep/prune: int32 index arrays. Returns dict with B (|P|,|S|), c (|P|,),
+    and the Schur residual Sigma_{P|S} needed for J*.
+    """
+    S_SS = sigma[jnp.ix_(keep, keep)]
+    S_PS = sigma[jnp.ix_(prune, keep)]
+    S_PP = sigma[jnp.ix_(prune, prune)]
+    ds = keep.shape[0]
+    reg = S_SS + lam * jnp.eye(ds, dtype=sigma.dtype)
+    cho = jax.scipy.linalg.cho_factor(reg)
+    B = jax.scipy.linalg.cho_solve(cho, S_PS.T).T          # (|P|, |S|)
+    c = mu[prune] - B @ mu[keep]
+    sigma_p_given_s = S_PP - B @ S_PS.T
+    return {"B": B, "c": c, "mu_p": mu[prune],
+            "sigma_pp": S_PP, "sigma_p_given_s": sigma_p_given_s}
+
+
+def mlp_distortion(sol, w_p):
+    """J* and gain (Eqs. 11/64). w_p: (|P|, D) pruned rows of the second
+    matrix (output-major orientation: y = h @ W, W (F, D))."""
+    wp = w_p.astype(jnp.float32)
+    j_star = jnp.sum((sol["sigma_p_given_s"] @ wp) * wp)
+    j_uncomp = jnp.sum((sol["sigma_pp"] @ wp) * wp) \
+        + jnp.sum(jnp.square(sol["mu_p"] @ wp))
+    return {"j_star": j_star, "j_uncomp": j_uncomp,
+            "gain": j_uncomp - j_star}
+
+
+# ---------------------------------------------------------------------------
+# attention compensation
+# ---------------------------------------------------------------------------
+
+def solve_full_m(G, h, t2, lam: float):
+    """Class 1: vec(M) = (G + lam I)^-1 h (row-major vec)."""
+    d2 = G.shape[0]
+    ds = int(round(d2 ** 0.5))
+    reg = G + lam * jnp.eye(d2, dtype=G.dtype)
+    cho = jax.scipy.linalg.cho_factor(reg)
+    m = jax.scipy.linalg.cho_solve(cho, h)
+    M = m.reshape(ds, ds)
+    j_star = t2 - h @ m          # Eq. 17 at the ridge optimum (lam -> 0)
+    return {"M": M, "j_star": j_star, "j_uncomp": t2,
+            "rho2": jnp.where(t2 > 0, (h @ m) / t2, 0.0)}
+
+
+def solve_diag_complex(Gd, hd, t2, lam: float):
+    """Class 2: (Gd + lam I) m = hd over complex pairs."""
+    dp = Gd.shape[0]
+    m = jnp.linalg.solve(Gd + lam * jnp.eye(dp, dtype=Gd.dtype), hd)
+    gain = jnp.real(jnp.vdot(hd, m))
+    return {"m": m, "j_star": t2 - gain, "j_uncomp": t2,
+            "rho2": jnp.where(t2 > 0, gain / t2, 0.0)}
+
+
+def solve_diag_real(Gd, hd, t2, lam: float):
+    """Class 3: real restriction (Gd, hd already real-reduced)."""
+    dp = Gd.shape[0]
+    m = jnp.linalg.solve(Gd + lam * jnp.eye(dp, dtype=Gd.dtype), hd)
+    gain = hd @ m
+    return {"m": m, "j_star": t2 - gain, "j_uncomp": t2,
+            "rho2": jnp.where(t2 > 0, gain / t2, 0.0)}
+
+
+# ---------------------------------------------------------------------------
+# folds
+# ---------------------------------------------------------------------------
+
+def fold_full_m(M):
+    """I + M = U S V^T -> (Fq, Fk) with Fq Fk^T = I + M (Eq. 16)."""
+    ds = M.shape[0]
+    u, s, vt = jnp.linalg.svd(jnp.eye(ds, dtype=M.dtype) + M)
+    sq = jnp.sqrt(s)
+    return u * sq[None, :], vt.T * sq[None, :]
+
+
+def fold_diag_complex(m):
+    """1 + m = rho e^{i phi}; a = sqrt(rho) e^{i phi/2}, b = conj-phase.
+
+    Returns per-pair 2x2 real blocks (dp, 2, 2) for Q and K: right-
+    multiplication on the (even, odd) columns of each kept rotary pair.
+    """
+    w = 1.0 + m
+    rho = jnp.abs(w)
+    phi = jnp.angle(w)
+    a = jnp.sqrt(rho) * jnp.exp(1j * phi / 2.0)
+    b = jnp.sqrt(rho) * jnp.exp(-1j * phi / 2.0)
+
+    def blocks(z):
+        re, im = jnp.real(z), jnp.imag(z)
+        # complex right-multiplication as 2x2 acting on (x, y) row vectors
+        return jnp.stack([jnp.stack([re, im], -1),
+                          jnp.stack([-im, re], -1)], -2)
+    return blocks(a), blocks(b)
+
+
+def fold_diag_real(m):
+    """1 + m real: per-pair scale sqrt|1+m| with sign assigned to Q side."""
+    w = 1.0 + m
+    s = jnp.sqrt(jnp.abs(w))
+    return jnp.sign(w) * s, s
+
+
+# ---------------------------------------------------------------------------
+# index utilities
+# ---------------------------------------------------------------------------
+
+def pairs_to_dims(pair_idx):
+    """rotary pair indices (..., p) -> interleaved dim indices (..., 2p)."""
+    even = 2 * pair_idx
+    odd = even + 1
+    return jnp.stack([even, odd], axis=-1).reshape(
+        pair_idx.shape[:-1] + (2 * pair_idx.shape[-1],))

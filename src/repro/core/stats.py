@@ -1,0 +1,234 @@
+"""Distributed calibration statistics for CORP.
+
+Two streaming passes over the (unlabeled) calibration set:
+
+  pass 1 (rank+mlp): per MLP unit the full first/second moments
+      n, s1 = sum_t x_t, s2 = sum_t x_t x_t^T          (fp32)
+    (s2's diagonal provides the ranking energies E[x^2]; its blocks provide
+    Sigma_SS / Sigma_PS for the closed-form compensation — one pass covers
+    both). Per attention unit the logit-energy ranking statistic
+      s_j = sum_b (sum_{t,h} q_{t,j}^2)(sum_t k_{t,j}^2)   per kv group.
+
+  pass 2 (attn compensation): given the kept index sets from ranking,
+    the ridge system inputs (paper Eq. 15):
+      G = sum_b (K_S^T K_S) (x) (Q_S^T Q_S),  h = sum_b vec((Q_S^T Q_P)(K_P^T K_S))
+    for class-1 units, or the diagonal complex/real Hadamard reductions for
+    rope-aware classes 2/3 (see repro.core.solve).
+
+Every statistic is a *linear* reduction over calibration samples, so under
+pjit the sums over the (data-sharded) batch axis compile to single psums —
+CORP distributes embarrassingly (DESIGN.md §2.1). Statistics accumulate in
+fp32 regardless of activation dtype (paper §Limitations).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.units import Unit
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _flat_tokens(x):
+    """(..., F) -> (N, F) fp32."""
+    return x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+
+
+ACTIVE_EPS = 1e-2   # |x| > eps counts as 'active' (appendix E ranking)
+
+
+def _moments(x):
+    """x: (N, F) -> dict(n, s1, s2, na)."""
+    xf = x.astype(jnp.float32)
+    return {"n": jnp.asarray(xf.shape[0], jnp.float32),
+            "s1": jnp.sum(xf, axis=0),
+            "s2": xf.T @ xf,
+            "na": jnp.sum((jnp.abs(xf) > ACTIVE_EPS).astype(jnp.float32),
+                          axis=0)}
+
+
+def _masked_moments(h, mask):
+    """h: (E, C, F) per-expert hidden; mask: (E, C) validity."""
+    hf = h.astype(jnp.float32) * mask[..., None]
+    return {"n": jnp.sum(mask, axis=1),                      # (E,)
+            "s1": jnp.sum(hf, axis=1),                       # (E, F)
+            "s2": jnp.einsum("ecf,ecg->efg", hf, hf),        # (E, F, F)
+            "na": jnp.sum((jnp.abs(hf) > ACTIVE_EPS).astype(jnp.float32)
+                          * mask[..., None], axis=1)}
+
+
+def _to_complex_pairs(q):
+    """(..., D) -> complex (..., D/2): rotary pair (2i, 2i+1) -> x+iy."""
+    return jax.lax.complex(q[..., 0::2], q[..., 1::2])
+
+
+def _group_q(q, n_groups):
+    """(B, T, H, d) -> (B, G, T*qpg, d): stack group queries along tokens."""
+    B, T, H, d = q.shape
+    qpg = H // n_groups
+    return q.reshape(B, T, n_groups, qpg, d).transpose(0, 2, 1, 3, 4) \
+            .reshape(B, n_groups, T * qpg, d)
+
+
+# ---------------------------------------------------------------------------
+# pass 1 reductions
+# ---------------------------------------------------------------------------
+
+def _p1_mlp(taps, unit: Unit):
+    key = f"{unit.tap_prefix}/h"
+    h = taps[key]
+    if unit.stacked:
+        return jax.vmap(lambda a: _moments(_flat_tokens(a)))(h)
+    return _moments(_flat_tokens(h))
+
+
+def _p1_moe(taps, unit: Unit):
+    h = taps[f"{unit.tap_prefix}/moe_h"]        # (G,E,C,F) [+reps]
+    mask = taps[f"{unit.tap_prefix}/moe_mask"]  # (G,E,C)
+
+    def one(hh, mm):
+        # merge group dim into capacity
+        G, E, C, F = hh.shape
+        hh = hh.transpose(1, 0, 2, 3).reshape(E, G * C, F)
+        mm = mm.transpose(1, 0, 2).reshape(E, G * C)
+        return _masked_moments(hh, mm)
+    if unit.stacked:
+        return jax.vmap(one)(h, mask)
+    return one(h, mask)
+
+
+def _p1_attn(taps, unit: Unit, cfg):
+    qk = "q" if unit.kind != "cross" else "cross_q"
+    kk = "k" if unit.kind != "cross" else "cross_k"
+    q = taps[f"{unit.tap_prefix}/{qk}"]  # (B,T,H,d) [+reps]
+    k = taps[f"{unit.tap_prefix}/{kk}"]
+
+    def one(q, k):
+        B = q.shape[0]
+        G = unit.n_groups
+        qg = _group_q(q, G)                       # (B,G,TQ,d)
+        kg = k.transpose(0, 2, 1, 3)              # (B,G,T,d)  (Hkv == G)
+        if unit.attn_class == 1:
+            eq = jnp.sum(jnp.square(qg), axis=2)  # (B,G,d)
+            ek = jnp.sum(jnp.square(kg), axis=2)
+        else:
+            qc, kc = _to_complex_pairs(qg), _to_complex_pairs(kg)
+            eq = jnp.sum(jnp.square(jnp.abs(qc)), axis=2)
+            ek = jnp.sum(jnp.square(jnp.abs(kc)), axis=2)
+        return {"rank": jnp.sum(eq * ek, axis=0), "n": jnp.asarray(B, jnp.float32)}
+    if unit.stacked:
+        return jax.vmap(one)(q, k)
+    return one(q, k)
+
+
+# ---------------------------------------------------------------------------
+# pass 2 reductions (attention compensation inputs)
+# ---------------------------------------------------------------------------
+
+def _p2_attn(taps, unit: Unit, keep, prune):
+    """keep/prune: int32 arrays of kept/pruned indices.
+
+    class 1: dims,  (G, ds) / (G, dp)          [+reps leading dim]
+    class 2/3: rotary pairs, (G, dsp) / (G, dpp)
+    """
+    qk = "q" if unit.kind != "cross" else "cross_q"
+    kk = "k" if unit.kind != "cross" else "cross_k"
+    q = taps[f"{unit.tap_prefix}/{qk}"]
+    k = taps[f"{unit.tap_prefix}/{kk}"]
+
+    def one(q, k, keep, prune):
+        G = unit.n_groups
+        qg = _group_q(q, G)                        # (B,G,TQ,d)
+        kg = k.transpose(0, 2, 1, 3)               # (B,G,T,d)
+        if unit.attn_class != 1:
+            qg, kg = _to_complex_pairs(qg), _to_complex_pairs(kg)
+
+        def per_group(qh, kh, S, P):
+            # qh: (B, TQ, d); S: (ds,)
+            qS = jnp.take(qh, S, axis=-1)
+            qP = jnp.take(qh, P, axis=-1)
+            kS = jnp.take(kh, S, axis=-1)
+            kP = jnp.take(kh, P, axis=-1)
+            if unit.attn_class == 1:
+                A_ss = jnp.einsum("bts,btu->bsu", qS, qS)
+                C_ss = jnp.einsum("bts,btu->bsu", kS, kS)
+                A_sp = jnp.einsum("bts,btp->bsp", qS, qP)
+                C_ps = jnp.einsum("btp,bts->bps", kP, kS)
+                # row-major vec(M): vec(A M C) = (A (x) C) vec(M), C symmetric
+                ds = qS.shape[-1]
+                G_mat = jnp.einsum("bij,blk->biljk", A_ss, C_ss)
+                G_mat = jnp.sum(G_mat, 0).reshape(ds * ds, ds * ds)
+                h_vec = jnp.einsum("bsp,bpu->bsu", A_sp, C_ps)
+                h_vec = jnp.sum(h_vec, 0).reshape(-1)
+                t_norm = jnp.sum(jnp.square(
+                    jnp.einsum("btp,bup->btu", qP, kP)))
+                return {"G": G_mat, "h": h_vec, "t2": t_norm}
+            # complex classes: Hadamard reduction
+            A_ss = jnp.einsum("bts,btu->bsu", jnp.conj(qS), qS)
+            C_ss = jnp.einsum("bts,btu->bsu", jnp.conj(kS), kS)
+            A_sp = jnp.einsum("bts,btp->bsp", jnp.conj(qS), qP)
+            C_ps = jnp.einsum("btp,bts->bps", jnp.conj(kP), kS)
+            Gd = jnp.sum(A_ss * jnp.transpose(C_ss, (0, 2, 1)), 0)
+            hd = jnp.sum(jnp.einsum("bsp,bps->bs", A_sp, C_ps), 0)
+            t_norm = jnp.sum(jnp.square(jnp.abs(
+                jnp.einsum("btp,bup->btu", qP, jnp.conj(kP)))))
+            if unit.attn_class == 3:
+                return {"G": jnp.real(Gd), "h": jnp.real(hd), "t2": t_norm}
+            return {"G": Gd, "h": hd, "t2": t_norm}
+
+        return jax.vmap(per_group, in_axes=(1, 1, 0, 0))(qg, kg, keep, prune)
+
+    if unit.stacked:
+        return jax.vmap(one)(q, k, keep, prune)
+    return one(q, k, keep, prune)
+
+
+# ---------------------------------------------------------------------------
+# public: jit-able per-batch statistics steps
+# ---------------------------------------------------------------------------
+
+def pass1_reduce(taps: Dict, units: List[Unit], cfg) -> Dict:
+    out = {}
+    for u in units:
+        if u.kind in ("mlp", "rwkv_mlp", "mamba"):
+            key = {"mlp": "h", "rwkv_mlp": "h", "mamba": "mamba_y"}[u.kind]
+            h = taps[f"{u.tap_prefix}/{key}"]
+            fn = lambda a: _moments(_flat_tokens(a))
+            out[u.name] = jax.vmap(fn)(h) if u.stacked else fn(h)
+        elif u.kind == "moe":
+            out[u.name] = _p1_moe(taps, u)
+        elif u.kind in ("attn", "mla", "cross"):
+            out[u.name] = _p1_attn(taps, u, cfg)
+    return out
+
+
+def pass2_reduce(taps: Dict, units: List[Unit], plan: Dict) -> Dict:
+    out = {}
+    for u in units:
+        if u.kind in ("attn", "mla", "cross") and u.name in plan:
+            keep, prune = plan[u.name]
+            out[u.name] = _p2_attn(taps, u, keep, prune)
+    return out
+
+
+def make_stats_step(model, units: List[Unit], phase: int, plan=None):
+    """Returns a jit-able fn(params, batch) -> stats pytree (sums)."""
+    def step(params, batch):
+        taps = {}
+        model.apply(params, batch, taps=taps)
+        if phase == 1:
+            return pass1_reduce(taps, units, model.cfg)
+        return pass2_reduce(taps, units, plan)
+    return step
+
+
+def tree_add(a, b):
+    if a is None:
+        return b
+    return jax.tree.map(jnp.add, a, b)

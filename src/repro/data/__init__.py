@@ -1,0 +1,4 @@
+from repro.data.synthetic import (calib_stream, lm_batch, lm_stream,
+                                  vit_batch, vit_stream)
+
+__all__ = ["lm_batch", "lm_stream", "vit_batch", "vit_stream", "calib_stream"]

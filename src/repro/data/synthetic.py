@@ -1,0 +1,138 @@
+"""Deterministic synthetic data pipeline.
+
+Design goals (DESIGN.md §2.3):
+  * deterministic-by-index: batch(step) is a pure function of
+    (seed, step, shard) — no inter-host coordination, no state to
+    checkpoint beyond the integer cursor, natural straggler tolerance
+    (a restarted host regenerates exactly its shard).
+  * learnable: tasks have real structure so trained models develop the
+    anisotropic/low-rank activations CORP exploits (paper App. A):
+      - LM: order-2 markov chain over a Zipf-ish vocabulary with
+        class-dependent transition sharpness,
+      - vision: class prototypes + structured (low-rank) noise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM: markov chain over tokens
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _markov_table(vocab: int, seed: int):
+    """Sparse-ish row-stochastic transition logits (vocab, vocab)."""
+    rng = np.random.RandomState(seed)
+    logits = rng.randn(vocab, vocab).astype(np.float32) * 2.0
+    # each token prefers a small successor set -> learnable structure
+    for i in range(vocab):
+        hot = rng.choice(vocab, size=max(2, vocab // 64), replace=False)
+        logits[i, hot] += 6.0
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    return p / p.sum(-1, keepdims=True)
+
+
+def lm_batch(step: int, *, batch: int, seq: int, vocab: int, seed: int = 0,
+             shard: int = 0, nshards: int = 1):
+    """Returns {'tokens': (b, seq), 'labels': (b, seq)} for this shard."""
+    table = _markov_table(vocab, seed)
+    b = batch // nshards
+    rng = np.random.RandomState(
+        ((seed * 1_000_003 + step) * 977 + shard) % (2**31 - 1))
+    toks = np.empty((b, seq + 1), np.int32)
+    toks[:, 0] = rng.randint(0, vocab, size=b)
+    # vectorized markov sampling
+    u = rng.rand(b, seq).astype(np.float32)
+    cdf = np.cumsum(table, axis=-1)
+    for t in range(seq):
+        rows = cdf[toks[:, t]]
+        toks[:, t + 1] = (u[:, t][:, None] < rows).argmax(-1)
+    return {"tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:])}
+
+
+def lm_stream(*, batch, seq, vocab, seed=0, start_step=0, shard=0, nshards=1):
+    step = start_step
+    while True:
+        yield step, lm_batch(step, batch=batch, seq=seq, vocab=vocab,
+                             seed=seed, shard=shard, nshards=nshards)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# vision: prototype classes + low-rank structured noise
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=8)
+def _prototypes(n_classes: int, img: int, seed: int):
+    rng = np.random.RandomState(seed + 7)
+    protos = rng.randn(n_classes, img, img, 3).astype(np.float32)
+    # smooth the prototypes (low-frequency structure)
+    for _ in range(2):
+        protos = 0.25 * (np.roll(protos, 1, 1) + np.roll(protos, -1, 1)
+                         + np.roll(protos, 1, 2) + np.roll(protos, -1, 2))
+    basis = rng.randn(8, img, img, 3).astype(np.float32) * 0.5
+    return protos, basis
+
+
+def vit_batch(step: int, *, batch: int, img: int, n_classes: int,
+              seed: int = 0, shard: int = 0, nshards: int = 1,
+              noise: float = 0.6, iid_noise: float = 0.1):
+    protos, basis = _prototypes(n_classes, img, seed)
+    b = batch // nshards
+    rng = np.random.RandomState(
+        ((seed * 999_983 + step) * 1009 + shard + 1) % (2**31 - 1))
+    labels = rng.randint(0, n_classes, size=b)
+    coef = rng.randn(b, basis.shape[0]).astype(np.float32)
+    x = protos[labels] + noise * np.einsum("bk,khwc->bhwc", coef, basis)
+    x = x + iid_noise * rng.randn(b, img, img, 3).astype(np.float32)
+    return {"images": jnp.asarray(x), "labels": jnp.asarray(labels)}
+
+
+def vit_stream(*, batch, img, n_classes, seed=0, start_step=0, shard=0,
+               nshards=1):
+    step = start_step
+    while True:
+        yield step, vit_batch(step, batch=batch, img=img,
+                              n_classes=n_classes, seed=seed, shard=shard,
+                              nshards=nshards)
+        step += 1
+
+
+# ---------------------------------------------------------------------------
+# calibration streams (unlabeled, finite)
+# ---------------------------------------------------------------------------
+
+def calib_stream(cfg, *, n_samples: int, batch: int, seq: int = 64,
+                 seed: int = 1234):
+    """Zero-arg-callable factory: returns a fresh finite iterator each call
+    (CORP traverses the stream twice). Unlabeled: label keys are dropped."""
+    steps = max(1, n_samples // batch)
+
+    def make():
+        for i in range(steps):
+            if cfg.family == "vit":
+                b = vit_batch(10_000 + i, batch=batch, img=cfg.img_size,
+                              n_classes=max(cfg.n_classes, 2), seed=seed)
+                yield {"images": b["images"]}
+            elif cfg.family == "encdec":
+                b = lm_batch(10_000 + i, batch=batch, seq=seq,
+                             vocab=cfg.vocab_size, seed=seed)
+                rng = np.random.RandomState(seed + i)
+                frames = rng.randn(batch, seq, cfg.d_model).astype(np.float32)
+                yield {"frames": jnp.asarray(frames), "tokens": b["tokens"]}
+            else:
+                b = lm_batch(10_000 + i, batch=batch, seq=seq,
+                             vocab=cfg.vocab_size, seed=seed)
+                out = {"tokens": b["tokens"]}
+                if cfg.frontend == "patch_stub":
+                    rng = np.random.RandomState(seed + i)
+                    out["patch_embeds"] = jnp.asarray(
+                        rng.randn(batch, 8, cfg.d_model).astype(np.float32))
+                yield out
+    return make

@@ -1,0 +1,223 @@
+"""Sharding rules for params and activations.
+
+Logical design (DESIGN.md §2.1):
+  * mesh axes: ('data', 'model') single-pod, ('pod', 'data', 'model') multi-pod.
+  * tensor parallelism over 'model' (Megatron column/row split; expert
+    parallelism for MoE; head parallelism for attention where divisible).
+  * optional FSDP (ZeRO-3) over ('pod','data') on a second dim for large
+    models — params/optimizer state are all-gathered per scanned layer.
+  * activations: batch over ('pod','data'); sequence-parallel residual over
+    'model' when the shape allows (Megatron-SP, GSPMD inserts the gathers).
+
+Everything is expressed against axis *names*, so re-meshing (elastic scaling)
+re-lowers without code changes.
+
+``constrain(x, kind)`` applies a with_sharding_constraint according to the
+active activation policy (a context variable set by the launchers) and is a
+no-op outside any policy — model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+# ---------------------------------------------------------------------------
+# activation policy
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def activation_policy(rules: dict, mesh=None):
+    """rules: {'residual': PartitionSpec | None, 'logits': ...}.
+
+    ``mesh`` must be the concrete mesh the step lowers under: the abstract
+    mesh is EMPTY inside ``with mesh:`` (verified), so divisibility checks
+    need the real axis sizes — otherwise non-divisible constraints silently
+    lower as padded shardings.
+    """
+    prev = getattr(_STATE, "rules", None)
+    prev_mesh = getattr(_STATE, "mesh", None)
+    _STATE.rules = rules
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+        _STATE.mesh = prev_mesh
+
+
+def _spec_fits(x, spec) -> bool:
+    mesh = getattr(_STATE, "mesh", None)
+    if mesh is None:
+        return False
+    try:
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    except Exception:
+        return False
+    for dim, names in enumerate(spec):
+        if names is None:
+            continue
+        group = names if isinstance(names, tuple) else (names,)
+        total = int(np.prod([sizes.get(n, 1) for n in group]))
+        if total > 1 and (dim >= x.ndim or x.shape[dim] % total):
+            return False
+    return True
+
+
+def constrain(x, kind: str):
+    rules = getattr(_STATE, "rules", None)
+    if not rules:
+        return x
+    spec = rules.get(kind)
+    if spec is None or not _spec_fits(x, spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_qkv(q, k, v):
+    """Head-shard q/k/v ALL-or-nothing: applying the layout to q alone when
+    kv heads don't divide the model axis (GQA with few kv heads) forces a
+    reshard inside attention — worse than no constraint (§Perf D2 note)."""
+    rules = getattr(_STATE, "rules", None)
+    if not rules:
+        return q, k, v
+    spec = rules.get("attn_qkv")
+    if spec is None or not (_spec_fits(q, spec) and _spec_fits(k, spec)
+                            and _spec_fits(v, spec)):
+        return q, k, v
+    c = jax.lax.with_sharding_constraint
+    return c(q, spec), c(k, spec), c(v, spec)
+
+
+def make_activation_rules(batch_axes=("data",), model_axis="model",
+                          seq_shard=True):
+    resid = P(batch_axes, model_axis if seq_shard else None, None)
+    return {
+        "residual": resid,
+        "logits": P(batch_axes, None, model_axis),
+        # mamba inner activations: channel-sharded over 'model', sequence-
+        # unsharded — the per-channel recurrence needs zero cross-chip
+        # traffic (§Perf J1). A batch-over-(data x model) variant was tried
+        # and REFUTED: the residual reshard at every mamba/attention boundary
+        # cost far more than it saved (EXPERIMENTS.md §Perf J4).
+        "mamba_inner": P(batch_axes, None, model_axis),
+        # attention q/k/v (B,T,H,d): heads over 'model', sequence gathered —
+        # with a sequence-sharded residual the layout change lowers to an
+        # all-to-all (constant per-chip bytes) instead of K/V all-gathers
+        # (§Perf iteration D2)
+        "attn_qkv": P(batch_axes, None, model_axis, None),
+    }
+
+
+# ---------------------------------------------------------------------------
+# parameter sharding
+# ---------------------------------------------------------------------------
+
+def _divisible(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _spec_for(path: str, shape, model_size: int, fsdp_axes, fsdp_size: int,
+              scanned: bool):
+    """Return a PartitionSpec for one parameter array."""
+    dims = list(shape)
+    off = 1 if scanned else 0   # leading scan/reps axis is never sharded
+    body = dims[off:]
+    spec = [None] * len(dims)
+
+    def assign(i, name):
+        spec[off + i] = name
+
+    leaf = path.rsplit("/", 1)[-1]
+
+    model_dim = None
+    # priority: expert axis > head axis > wide/output axis > input axis
+    if leaf in ("wg", "wu", "wd") and len(body) == 3:        # MoE (E, D, F)
+        if _divisible(body[0], model_size):
+            model_dim = 0
+    elif leaf in ("wq", "wk", "wv") and len(body) == 3:      # (D, H, dq)
+        if _divisible(body[1], model_size):
+            model_dim = 1
+        elif _divisible(body[0], model_size):
+            model_dim = 0
+    elif leaf == "wo" and len(body) == 3:                    # (H, dv, D)
+        if _divisible(body[0], model_size):
+            model_dim = 0
+        elif _divisible(body[2], model_size):
+            model_dim = 2
+    elif leaf in ("w_uq_nope", "w_uq_rope", "w_uk_nope", "w_uv") \
+            and len(body) == 3:                              # (r, H, d)
+        if _divisible(body[1], model_size):
+            model_dim = 1
+    elif leaf in ("embed", "head") and len(body) == 2:
+        # vocab-sharded (vocab padded to a multiple of the model axis)
+        vdim = 0 if body[0] >= body[1] else 1
+        if _divisible(body[vdim], model_size):
+            model_dim = vdim
+    elif leaf == "router":
+        model_dim = None
+    elif len(body) == 2:
+        # generic linear: shard the wider dim on 'model'
+        cand = 0 if body[0] >= body[1] else 1
+        if _divisible(body[cand], model_size):
+            model_dim = cand
+        elif _divisible(body[1 - cand], model_size):
+            model_dim = 1 - cand
+    elif len(body) == 1:
+        model_dim = None
+
+    if model_dim is not None:
+        assign(model_dim, "model")
+
+    if fsdp_axes and fsdp_size > 1:
+        for i, d in enumerate(body):
+            if spec[off + i] is None and len(body) >= 2 \
+                    and _divisible(d, fsdp_size):
+                assign(i, fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0])
+                break
+    return P(*spec)
+
+
+def param_specs(params, mesh: Mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree matching ``params`` (works on eval_shape trees)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_size = sizes.get("model", 1)
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in sizes) if fsdp else ()
+    fsdp_size = int(np.prod([sizes[a] for a in fsdp_axes])) if fsdp_axes else 1
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        scanned = "/p" in path and any(
+            seg.startswith("p") and seg[1:].isdigit()
+            for seg in path.split("/"))
+        specs.append(_spec_for(path, leaf.shape, model_size, fsdp_axes,
+                               fsdp_size, scanned))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shardings_of(specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_specs(batch_tree, mesh: Mesh):
+    """Shard every batch array's leading dim over ('pod','data')."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    def f(x):
+        spec = [None] * x.ndim
+        if x.ndim >= 1 and x.shape[0] % int(
+                np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+                         for a in axes])) == 0:
+            spec[0] = axes if len(axes) > 1 else axes[0]
+        return P(*spec)
+    return jax.tree.map(f, batch_tree)

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the CORP framework.
+
+Each kernel package provides:
+  <name>.py - pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    - jit'd public wrapper with backend dispatch (pallas on TPU,
+              memory-sane XLA implementation elsewhere, interpret for tests)
+  ref.py    - pure-jnp oracle used by the test suite
+
+Kernels:
+  flash_attention - blockwise online-softmax attention (calibration forward,
+                    prefill, training) — the dominant non-GEMM compute.
+  gram            - streaming second-moment (X^T X) accumulation — CORP's
+                    calibration statistics hot-spot (Alg. 3/5 inputs).
+  wkv6            - RWKV-6 chunked linear-attention recurrence (rwkv6-3b arch).
+  flash_decode    - split-KV single-token decode attention (FlashDecoding) —
+                    the memory-bound serving hot path the paper's pruning targets.
+"""

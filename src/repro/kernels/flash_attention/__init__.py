@@ -1,0 +1,4 @@
+from repro.kernels.flash_attention import ops, ref
+from repro.kernels.flash_attention.ops import attention
+
+__all__ = ["ops", "ref", "attention"]

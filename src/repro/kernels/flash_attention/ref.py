@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention (GQA, causal / sliding-window / full).
+
+Materializes the full (T, S) logit matrix in fp32 — only suitable for small
+shapes; this is the ground truth the Pallas kernel and the chunked XLA
+implementation are validated against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              scale: float | None = None):
+    """q: (B,T,H,dq), k: (B,S,Hkv,dq), v: (B,S,Hkv,dv) -> (B,T,H,dv)."""
+    B, T, H, dq = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(dq).astype(jnp.float32)
+    qg = q.reshape(B, T, Hkv, g, dq).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    logits = jnp.einsum("btngq,bsnq->bngts", qg, kf) * scale
+    qi = jnp.arange(T)[:, None] + (S - T)   # right-aligned query positions
+    ki = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask = mask & (ki <= qi)
+    if window is not None:
+        mask = mask & (ki > qi - window)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bngts,bsnv->btngv", w, v.astype(jnp.float32))
+    return o.reshape(B, T, H, -1).astype(q.dtype)

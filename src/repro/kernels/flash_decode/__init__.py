@@ -1,0 +1,4 @@
+from repro.kernels.flash_decode import ops, ref
+from repro.kernels.flash_decode.ops import decode_attention
+
+__all__ = ["ops", "ref", "decode_attention"]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for single-token decode attention (GQA, masked cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention(q, k, v, valid, scale: float):
+    """q: (B,H,dq); k/v: (B,S,Hkv,d); valid: (B,S) -> (B,H,dv). fp32 math."""
+    B, H, dq = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, dq).astype(jnp.float32)
+    logits = jnp.einsum("bngq,bsnq->bngs", qg,
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bngs,bsnv->bngv", w, v.astype(jnp.float32))
+    return o.reshape(B, H, -1).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.gram import ops, ref
+from repro.kernels.gram.ops import gram
+
+__all__ = ["ops", "ref", "gram"]

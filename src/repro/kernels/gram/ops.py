@@ -1,0 +1,29 @@
+"""Public gram op with backend dispatch (env ``REPRO_GRAM_IMPL`` overrides)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.gram import ref as _ref
+from repro.kernels.gram.gram import gram as _pallas_gram
+
+
+def _resolve_impl(N: int, F: int) -> str:
+    impl = os.environ.get("REPRO_GRAM_IMPL", "")
+    if impl:
+        return impl
+    if jax.default_backend() == "tpu" and N % 512 == 0 and F % 128 == 0:
+        return "pallas"
+    return "ref"
+
+
+def gram(x, impl=None):
+    """x: (N, F) -> {'s2': (F, F), 's1': (F,)} in fp32."""
+    N, F = x.shape
+    impl = impl or _resolve_impl(N, F)
+    if impl == "ref":
+        return _ref.gram(x)
+    bn = 512 if N % 512 == 0 else N
+    bf = 128 if F % 128 == 0 else F
+    return _pallas_gram(x, bf=bf, bn=bn, interpret=(impl == "interpret"))

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for streaming second-moment accumulation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram(x):
+    """x: (N, F) -> {'s2': (F, F) fp32 X^T X, 's1': (F,) column sums}."""
+    xf = x.astype(jnp.float32)
+    return {"s2": xf.T @ xf, "s1": jnp.sum(xf, axis=0)}

@@ -1,0 +1,4 @@
+from repro.kernels.wkv6 import ops, ref
+from repro.kernels.wkv6.ops import wkv6
+
+__all__ = ["ops", "ref", "wkv6"]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) recurrence.
+
+Per head with key/value dim N and state S in R^{N x N}:
+    y_t = r_t^T (S_{t-1} + (u * k_t) v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with data-dependent per-channel decay w_t in (0, 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6(r, k, v, w, u, state=None):
+    """r,k,v,w: (B, T, H, N); u: (H, N). Returns (y (B,T,H,N), final state).
+
+    ``state``: optional (B, H, N, N) initial state (decode continuation).
+    All math in fp32.
+    """
+    B, T, H, N = r.shape
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(S, rkvw):
+        rt, kt, vt, wt = rkvw                    # (B, H, N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, N, N)
+        y = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    final, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), final

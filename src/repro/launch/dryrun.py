@@ -1,0 +1,282 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/roofline terms.
+
+MUST be run as its own process (the device-count flag is set above, before
+any other import, because jax locks the device count on first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --out dryrun.json
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh single
+
+The run is restartable: one JSON record per cell, existing cells skipped.
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, get_config     # noqa: E402
+from repro.distrib import sharding as shard_mod             # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.models import build_model, cache_specs, input_specs  # noqa: E402
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine  # noqa: E402
+from repro.roofline import analyze_compiled, model_flops, params_count  # noqa: E402
+
+
+def should_skip(cfg, shape) -> str | None:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("pure full-attention arch: 500k decode skipped per "
+                "assignment (see DESIGN.md §3.1)")
+    return None
+
+
+def _named(specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def cache_partition_specs(cache_sds, mesh, global_batch: int):
+    """Heuristic decode-cache sharding: the *batch* dim (size ==
+    global_batch; scanned caches carry a leading reps dim, so it is not
+    always dim 0) over ('pod','data'); the largest remaining model-divisible
+    dim over 'model' (time axis for KV — flash-decoding style partial
+    softmax; inner dim for SSM states)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    baxes = tuple(a for a in ("pod", "data") if a in sizes)
+    bsize = int(np.prod([sizes[a] for a in baxes]))
+    msize = sizes.get("model", 1)
+
+    def f(x):
+        spec = [None] * x.ndim
+        bdim = None
+        for i, s in enumerate(x.shape):
+            if s == global_batch and s % bsize == 0:
+                bdim = i
+                break
+        if bdim is not None:
+            spec[bdim] = baxes if len(baxes) > 1 else baxes[0]
+        cands = sorted((i for i in range(x.ndim) if i != bdim),
+                       key=lambda i: -x.shape[i])
+        for i in cands:
+            if x.shape[i] % msize == 0 and x.shape[i] >= msize:
+                spec[i] = "model"
+                break
+        return P(*spec)
+    return jax.tree.map(f, cache_sds)
+
+
+def build_lowering(arch: str, shape_name: str, mesh, *, sparsity=0.0):
+    cfg = get_config(arch)
+    if sparsity > 0:
+        cfg = cfg.pruned(sparsity, sparsity)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    pc = params_count(cfg)
+    fsdp = pc["total"] * 2 / dict(zip(mesh.axis_names, mesh.devices.shape)) \
+        .get("model", 1) > 2e9
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pspecs = shard_mod.param_specs(params_sds, mesh, fsdp=fsdp)
+    pshard = _named(pspecs, mesh)
+    batch_sds = input_specs(cfg, shape)
+    bshard = _named(shard_mod.batch_specs(batch_sds, mesh), mesh)
+    seq_ok = shape.seq_len % dict(zip(mesh.axis_names,
+                                      mesh.devices.shape)).get("model", 1) == 0
+    # sequence-parallel residual except for mamba stacks, whose chunked
+    # selective scan forces a reshard around every recurrent layer (§Perf
+    # J1; rwkv's chunked wkv tolerates a seq-sharded residual — measured)
+    has_mamba = any(k == "mamba" for k in cfg.layer_kinds)
+    seq_shard = shape.kind != "decode" and seq_ok and not has_mamba
+    if shape.kind == "prefill" and cfg.mla is None and cfg.has_attention:
+        # prefill-SP trades the (B,T,D) output all-reduce for a per-layer
+        # K/V all-gather of (B,S,Hkv,dq): only a win when KV is compressed
+        # vs the residual width (GQA/MLA), a wash or loss for plain MHA
+        # (measured on deepseek-7b: tx x1.76) — §Perf D1 refinement
+        seq_shard = seq_shard and cfg.n_kv_heads * cfg.qk_full < cfg.d_model
+    rules = shard_mod.make_activation_rules(
+        batch_axes=tuple(a for a in ("pod", "data") if a in mesh.axis_names),
+        seq_shard=seq_shard)
+    if cfg.mla is None:
+        # head-sharded qkv only pays off for MLA's per-head K expansion;
+        # for plain MHA/GQA GSPMD's own schedule measured better (§Perf D2)
+        rules = dict(rules, attn_qkv=None)
+
+    if shape.kind == "train":
+        ocfg = AdamWConfig(m_dtype="bfloat16" if pc["total"] > 1e11
+                           else "float32")
+        opt_sds = jax.eval_shape(lambda: adamw_init(params_sds, ocfg))
+        oshard = _named(shard_mod.param_specs(opt_sds, mesh, fsdp=fsdp), mesh)
+        micro = int(os.environ.get("REPRO_MICROBATCH", "1"))
+
+        def train_step(params, opt_state, batch):
+            if micro > 1:
+                # gradient accumulation (§Perf iteration J3): same global
+                # batch, `micro` sequential microbatches — divides the
+                # activation-transient memory by `micro` at the cost of
+                # re-gathering FSDP weights per microstep
+                mb = jax.tree.map(
+                    lambda a: a.reshape((micro, a.shape[0] // micro)
+                                        + a.shape[1:]), batch)
+
+                acc_dt = jnp.dtype(os.environ.get("REPRO_GACC_DTYPE",
+                                                  "float32"))
+
+                def micro_step(acc, b):
+                    loss, grads = jax.value_and_grad(
+                        lambda p: model.loss(p, b))(params)
+                    grads = jax.tree.map(lambda g: g.astype(acc_dt), grads)
+                    return jax.tree.map(jnp.add, acc,
+                                        (grads, loss.astype(acc_dt))), None
+
+                zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                     params), jnp.zeros((), acc_dt))
+                (gsum, lsum), _ = jax.lax.scan(micro_step, zero, mb)
+                grads = jax.tree.map(lambda g: g / micro, gsum)
+                loss = lsum / micro
+            else:
+                loss, grads = jax.value_and_grad(
+                    lambda p: model.loss(p, batch))(params)
+            lr = warmup_cosine(opt_state["step"], peak=3e-4, warmup=2000,
+                               total=100_000)
+            new_p, new_o, metrics = adamw_update(params, grads, opt_state,
+                                                 lr, ocfg)
+            return new_p, new_o, loss
+
+        # donate params+opt: the update aliases them in place (halves the
+        # resident state vs keeping old+new live across the step)
+        fn = jax.jit(train_step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, shape.seq_len)
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard))
+        args = (params_sds, batch_sds)
+    else:  # decode
+        c_sds = cache_specs(cfg, shape)
+        cshard = _named(cache_partition_specs(c_sds, mesh,
+                                              shape.global_batch), mesh)
+        tok_sds = batch_sds["token"]
+
+        def decode(params, token, cache):
+            return model.decode_step(params, token, cache)
+
+        # donate the cache: decode updates it in place (no double-resident
+        # KV, and the scatter aliases instead of copying)
+        fn = jax.jit(decode, in_shardings=(pshard, None, cshard),
+                     out_shardings=(None, cshard), donate_argnums=(2,))
+        args = (params_sds, tok_sds, c_sds)
+
+    with mesh:
+        with shard_mod.activation_policy(rules, mesh=mesh):
+            lowered = fn.lower(*args)
+            from repro.roofline.analysis import jaxpr_matmul_flops
+            logical_flops = jaxpr_matmul_flops(fn, *args)
+    return lowered, cfg, shape, logical_flops
+
+
+def run_cell(arch, shape_name, mesh_kind, *, sparsity=0.0):
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "sparsity": sparsity}
+    cfg = get_config(arch)
+    if sparsity > 0:
+        cfg = cfg.pruned(sparsity, sparsity)
+    shape = SHAPES[shape_name]
+    skip = should_skip(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        t0 = time.time()
+        lowered, cfg, shape, lflops = build_lowering(arch, shape_name, mesh,
+                                                     sparsity=sparsity)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        with mesh:
+            compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+        n_dev = int(mesh.devices.size)
+        terms = analyze_compiled(compiled, n_devices=n_dev,
+                                 logical_flops=lflops)
+        mf = model_flops(cfg, shape)
+        rec.update(status="ok", roofline=terms,
+                   model_flops=mf, logical_flops=lflops,
+                   useful_flops_ratio=mf / max(lflops, 1.0),
+                   params=params_count(cfg))
+    except Exception as e:   # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--sparsity", type=float, default=0.0,
+                    help="CORP sparsity for pruned-model dry-runs")
+    ap.add_argument("--out", default="dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    records = {}
+    if os.path.exists(args.out):
+        for r in json.load(open(args.out)):
+            records[(r["arch"], r["shape"], r["mesh"],
+                     r.get("sparsity", 0.0))] = r
+
+    def flush():
+        tmp = args.out + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(list(records.values()), f, indent=1)
+        os.replace(tmp, args.out)
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                key = (arch, shape, mk, args.sparsity)
+                if key in records and not args.force \
+                        and records[key]["status"] in ("ok", "skipped"):
+                    continue
+                print(f"[dryrun] {arch} x {shape} x {mk} ...", flush=True)
+                rec = run_cell(arch, shape, mk, sparsity=args.sparsity)
+                records[key] = rec
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" tc={r['t_compute']:.3e}"
+                             f" tm={r['t_memory']:.3e}"
+                             f" tx={r['t_collective']:.3e}")
+                elif status == "error":
+                    extra = " " + rec["error"][:200]
+                print(f"[dryrun] {arch} x {shape} x {mk}: {status}{extra}",
+                      flush=True)
+                flush()
+    flush()
+    n_ok = sum(1 for r in records.values() if r["status"] == "ok")
+    n_err = sum(1 for r in records.values() if r["status"] == "error")
+    n_skip = sum(1 for r in records.values() if r["status"] == "skipped")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,23 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run entry
+point must set XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes=None):
+    """Arbitrary mesh for tests/examples (e.g. (2,4) on 8 host devices)."""
+    if axes is None:
+        axes = ("data", "model")[-len(shape):] if len(shape) <= 2 \
+            else ("pod", "data", "model")
+    return jax.make_mesh(tuple(shape), tuple(axes))

@@ -1,0 +1,3 @@
+from repro.models.api import Model, build_model, cache_specs, input_specs
+
+__all__ = ["Model", "build_model", "cache_specs", "input_specs"]

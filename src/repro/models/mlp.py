@@ -1,0 +1,153 @@
+"""MLP mixers: dense (plain / gated) and Mixture-of-Experts.
+
+CORP integration: the tap ``h`` is the activation entering the *second*
+linear map (Eq. 1 of the paper: ``y = W x + b`` with ``x`` the hidden
+activation). For gated (GLU) MLPs the hidden activation is
+``act(x W_g) * (x W_u)`` — pruning a hidden channel removes a column of both
+W_g and W_u plus a row of W_d, exactly one structured unit. For MoE the tap
+additionally carries the dispatch mask so statistics are expert-conditional.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import activation, dense_init, dtype_of, tap
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None, bias=None):
+    dt = dtype_of(cfg)
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.eff_d_ff
+    bias = cfg.mlp_kind == "plain" if bias is None else bias
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_kind == "glu":
+        p = {
+            "wg": dense_init(ks[0], (D, F), dt),
+            "wu": dense_init(ks[1], (D, F), dt),
+            "wd": dense_init(ks[2], (F, D), dt),
+        }
+    else:
+        p = {
+            "wu": dense_init(ks[0], (D, F), dt),
+            "wd": dense_init(ks[1], (F, D), dt),
+        }
+    if bias:
+        p["bu"] = jnp.zeros((F,), jnp.float32)
+        p["bd"] = jnp.zeros((D,), jnp.float32)
+        if cfg.mlp_kind == "glu":
+            p["bg"] = jnp.zeros((F,), jnp.float32)
+    return p
+
+
+def apply_mlp(p, x, cfg, taps=None):
+    """x: (..., D) -> (..., D)."""
+    act = activation(cfg.act)
+    dt = x.dtype
+    u = x @ p["wu"]
+    if "bu" in p:
+        u = u + p["bu"].astype(dt)
+    if "wg" in p:
+        gpre = x @ p["wg"]
+        if "bg" in p:
+            gpre = gpre + p["bg"].astype(dt)
+        h = act(gpre) * u
+    else:
+        h = act(u)
+    tap(taps, "h", h)
+    y = h @ p["wd"]
+    if "bd" in p:
+        y = y + p["bd"].astype(dt)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style grouped one-hot dispatch with capacity)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg):
+    dt = dtype_of(cfg)
+    m = cfg.moe
+    D, E = cfg.d_model, m.num_experts
+    F = cfg.eff_d_ff if cfg.d_ff_kept is not None else m.d_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32, scale=0.02),
+        "wg": dense_init(ks[1], (E, D, F), dt),
+        "wu": dense_init(ks[2], (E, D, F), dt),
+        "wd": dense_init(ks[3], (E, F, D), dt),
+    }
+    if m.num_shared > 0:
+        # shared experts = one dense MLP of num_shared * d_expert hidden
+        shared_cfg = cfg.replace(d_ff=m.num_shared * m.d_expert,
+                                 d_ff_kept=(None if cfg.d_ff_kept is None
+                                            else m.num_shared * cfg.d_ff_kept))
+        p["shared"] = init_mlp(ks[4], shared_cfg)
+    return p
+
+
+def _group_tokens(x, target=2048):
+    """(B, T, D) -> (G, tg, D) with tg <= target dividing B*T."""
+    B, T, D = x.shape
+    n = B * T
+    tg = min(target, n)
+    while n % tg:
+        tg -= 1
+    return x.reshape(n // tg, tg, D), n
+
+
+def apply_moe(p, x, cfg, taps=None, train=False):
+    """Top-k routed experts with capacity; returns (y, aux_loss)."""
+    m = cfg.moe
+    E, K = m.num_experts, m.top_k
+    B, T, D = x.shape
+    xg, n = _group_tokens(x)
+    G, tg, _ = xg.shape
+    C = max(K, int(np.ceil(tg * K * m.capacity_factor / E)))
+    C = min(C, tg)
+
+    logits = (xg.astype(jnp.float32) @ p["router"])        # (G, tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (G, tg, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G, tg, K, E)
+    flat = onehot.reshape(G, tg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                    # (G, tg*K, E)
+    pos = pos.reshape(G, tg, K, E)
+    within_cap = pos < C
+    keep = onehot * within_cap                               # (G, tg, K, E)
+    # position of each (token, k) inside its *chosen* expert queue: (G, tg, K)
+    pos_k = jnp.sum(pos * onehot, axis=-1)
+    slot_k = jax.nn.one_hot(pos_k.astype(jnp.int32), C, dtype=jnp.float32)
+    # dispatch: (G, tg, E, C) — contraction over K avoids a (K,E,C) blowup
+    dispatch = jnp.einsum("gtke,gtkc->gtec", keep, slot_k)
+    combine = jnp.einsum("gtke,gtk,gtkc->gtec", keep, gate_vals, slot_k)
+
+    dt = x.dtype
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xg)  # (G,E,C,D)
+    act = activation(cfg.act)
+    u = jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    h = act(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) * u
+    tap(taps, "moe_h", h)
+    if taps is not None:
+        taps["moe_mask"] = jnp.einsum("gtec->gec", dispatch).astype(jnp.float32)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), ye)
+    y = y.reshape(B, T, D)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], x, cfg, taps=taps)
+
+    # load-balancing aux loss (Switch-style)
+    frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))       # (E,)
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,256 @@
+"""Attention-free mixers: RWKV-6 (Finch) time/channel mix and Mamba.
+
+CORP applicability (DESIGN.md §Arch-applicability):
+  * RWKV-6 time-mix has no QK bilinear logits -> QK pruning inapplicable.
+  * RWKV channel-mix is a two-matrix MLP -> hidden channels prunable with
+    the paper's affine compensation (tap 'h').
+  * Mamba inner channels pass only through channel-wise ops (depthwise conv,
+    per-channel SSM, gate) between in_proj and out_proj -> prunable as
+    MLP-like hidden dims (beyond-paper extension; tap 'mamba_y' feeds the
+    same closed-form machinery against out_proj).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distrib.sharding import constrain
+from repro.kernels.wkv6 import ops as wkv_ops
+from repro.models.common import dense_init, dtype_of, tap
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6
+# ---------------------------------------------------------------------------
+
+def init_rwkv_time(key, cfg):
+    dt = dtype_of(cfg)
+    D = cfg.d_model
+    N = cfg.rwkv.head_dim
+    H = D // N
+    r = cfg.rwkv.decay_lora
+    ks = jax.random.split(key, 10)
+    return {
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_v": jnp.full((D,), 0.5, jnp.float32),
+        "mu_w": jnp.full((D,), 0.5, jnp.float32),
+        "mu_g": jnp.full((D,), 0.5, jnp.float32),
+        "w0": jnp.full((D,), -2.0, jnp.float32),
+        "w_lora_a": dense_init(ks[0], (D, r), jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[1], (r, D), jnp.float32) * 1e-2),
+        "u": (jax.random.normal(ks[2], (H, N), jnp.float32) * 0.1),
+        "wr": dense_init(ks[3], (D, D), dt),
+        "wk": dense_init(ks[4], (D, D), dt),
+        "wv": dense_init(ks[5], (D, D), dt),
+        "wg": dense_init(ks[6], (D, D), dt),
+        "wo": dense_init(ks[7], (D, D), dt, scale=1.0 / np.sqrt(D)),
+        "ln_scale": jnp.ones((D,), jnp.float32),
+        "ln_bias": jnp.zeros((D,), jnp.float32),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} with x_{-1} = prev (or zeros)."""
+    pad = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def apply_rwkv_time(p, x, cfg, taps=None, state=None):
+    """x: (B, T, D). state: {'shift': (B,D), 'wkv': (B,H,N,N)} or None.
+
+    Returns (y, new_state).
+    """
+    B, T, D = x.shape
+    N = cfg.rwkv.head_dim
+    H = D // N
+    prev = state["shift"] if state is not None else None
+    xs = _shift(x, prev)
+    r = _mix(x, xs, p["mu_r"]) @ p["wr"]
+    k = _mix(x, xs, p["mu_k"]) @ p["wk"]
+    v = _mix(x, xs, p["mu_v"]) @ p["wv"]
+    g = _mix(x, xs, p["mu_g"]) @ p["wg"]
+    xw = _mix(x, xs, p["mu_w"]).astype(jnp.float32)
+    # data-dependent decay (the v6 feature)
+    dd = jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(p["w0"] + dd))                  # (B,T,D) in (0,1)
+
+    hd = lambda z: z.reshape(B, T, H, N)
+    s0 = state["wkv"] if state is not None else None
+    y, s_new = wkv_ops.wkv6(hd(r), hd(k), hd(v),
+                            hd(w.astype(x.dtype)), p["u"], s0)
+    y = y.reshape(B, T, D).astype(jnp.float32)
+    # per-head group norm
+    yh = y.reshape(B, T, H, N)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, T, D) * p["ln_scale"] + p["ln_bias"]
+    y = (y.astype(x.dtype) * jax.nn.silu(g)) @ p["wo"]
+    new_state = {"shift": x[:, -1], "wkv": s_new}
+    return y, new_state
+
+
+def init_rwkv_channel(key, cfg):
+    dt = dtype_of(cfg)
+    D, F = cfg.d_model, cfg.eff_d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((D,), 0.5, jnp.float32),
+        "mu_r": jnp.full((D,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], (D, F), dt),
+        "wv": dense_init(ks[1], (F, D), dt),
+        "wr": dense_init(ks[2], (D, D), dt),
+    }
+
+
+def apply_rwkv_channel(p, x, cfg, taps=None, state=None):
+    """RWKV channel-mix (the 'MLP'): squared-relu, receptance gate."""
+    prev = state["shift"] if state is not None else None
+    xs = _shift(x, prev)
+    h = jnp.square(jax.nn.relu(_mix(x, xs, p["mu_k"]) @ p["wk"]))
+    tap(taps, "h", h)
+    kv = h @ p["wv"]
+    if "bv_comp" in p:   # CORP compensation bias (added by pruning)
+        kv = kv + p["bv_comp"].astype(kv.dtype)
+    y = jax.nn.sigmoid(_mix(x, xs, p["mu_r"]) @ p["wr"]) * kv
+    return y, {"shift": x[:, -1]}
+
+
+def init_rwkv_state(cfg, batch):
+    D = cfg.d_model
+    N = cfg.rwkv.head_dim
+    H = D // N
+    return {
+        "time": {"shift": jnp.zeros((batch, D), dtype_of(cfg)),
+                 "wkv": jnp.zeros((batch, H, N, N), jnp.float32)},
+        "channel": {"shift": jnp.zeros((batch, D), dtype_of(cfg))},
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM)
+# ---------------------------------------------------------------------------
+
+def _dt_rank(cfg) -> int:
+    return max(1, int(np.ceil(cfg.d_model / 16)))
+
+
+def init_mamba(key, cfg):
+    dt = dtype_of(cfg)
+    D = cfg.d_model
+    di = cfg.eff_d_inner
+    ns = cfg.mamba.d_state
+    dc = cfg.mamba.d_conv
+    dr = _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    a = jnp.tile(jnp.arange(1, ns + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (dc, di), jnp.float32, scale=0.2),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dr + 2 * ns), dt),
+        "dt_proj": dense_init(ks[3], (dr, di), jnp.float32),
+        "dt_bias": jnp.full((di,), -4.0, jnp.float32),  # softplus ~ small dt
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, D), dt),
+    }
+
+
+def _causal_conv(x, w, b, prev=None):
+    """Depthwise causal conv. x: (B,T,di), w: (dc,di), prev: (B,dc-1,di)."""
+    dc = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(dc))
+    return y + b.astype(x.dtype), xp[:, -(dc - 1):]
+
+
+def apply_mamba(p, x, cfg, taps=None, state=None, scan_chunk=256):
+    """x: (B,T,D). state: {'conv': (B,dc-1,di), 'ssm': (B,di,ns)} or None.
+
+    §Perf iteration J1: the inner dim is sequence-unsharded but
+    *channel-sharded* over 'model' (selective-scan state is per-channel, so
+    channel sharding needs zero cross-chip traffic in the recurrence), and
+    ALL discretization tensors (dt, dA, dBx — the (B,T,di,ns) blow-ups) are
+    computed per chunk inside the sequential scan instead of materializing
+    for the full sequence.
+    """
+    B, T, D = x.shape
+    di = cfg.eff_d_inner
+    ns = cfg.mamba.d_state
+    dr = _dt_rank(cfg)
+    xz = x @ p["in_proj"]
+    xi, z = xz[..., :di], xz[..., di:]
+    xi = constrain(xi, "mamba_inner")
+    conv_prev = state["conv"] if state is not None else None
+    xc, conv_new = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_prev)
+    xc = constrain(jax.nn.silu(xc), "mamba_inner")
+    A = -jnp.exp(p["a_log"])                                  # (di,ns)
+
+    def discretize(xc_blk):
+        """(B,L,di) -> per-chunk dt/dA/dBx/C — nothing persists beyond it."""
+        xdb = xc_blk @ p["x_proj"]
+        dt_in, Bs, Cs = (xdb[..., :dr], xdb[..., dr:dr + ns],
+                         xdb[..., dr + ns:])
+        dts = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_proj"]
+                              + p["dt_bias"])                 # (B,L,di)
+        dA = jnp.exp(dts[..., None] * A[None, None])          # (B,L,di,ns)
+        dBx = (dts * xc_blk.astype(jnp.float32))[..., None] \
+            * Bs.astype(jnp.float32)[..., None, :]
+        return dA, dBx, Cs
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((B, di, ns),
+                                                          jnp.float32)
+    if T == 1:
+        dA, dBx, Cs = discretize(xc)
+        h = dA[:, 0] * h0 + dBx[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, Cs[:, 0].astype(jnp.float32))[:, None]
+        h_last = h
+    else:
+        # chunked scan: sequential over chunks, associative within
+        L = min(scan_chunk, T)
+        while T % L:
+            L -= 1
+        nc = T // L
+        xcc = xc.reshape(B, nc, L, di).transpose(1, 0, 2, 3)
+
+        def chunk_step(h, xc_blk):
+            a, b, Cs = discretize(xc_blk)                    # (B,L,di,ns)
+
+            def comb(e1, e2):
+                a1, b1 = e1
+                a2, b2 = e2
+                return a1 * a2, b1 * a2 + b2
+            ac, bc = jax.lax.associative_scan(comb, (a, b), axis=1)
+            hs = ac * h[:, None] + bc                        # (B,L,di,ns)
+            y_blk = jnp.einsum("bldn,bln->bld", hs,
+                               Cs.astype(jnp.float32))
+            return hs[:, -1], y_blk
+
+        h_last, yc = jax.lax.scan(chunk_step, h0, xcc)
+        y = yc.transpose(1, 0, 2, 3).reshape(B, T, di)
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    tap(taps, "mamba_y", y)
+    out = y @ p["out_proj"]
+    if "out_b" in p:   # CORP compensation bias (added by pruning)
+        out = out + p["out_b"].astype(out.dtype)
+    new_state = {"conv": conv_new, "ssm": h_last}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch):
+    di = cfg.eff_d_inner
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, di), dtype_of(cfg)),
+        "ssm": jnp.zeros((batch, di, cfg.mamba.d_state), jnp.float32),
+    }

@@ -1,0 +1,108 @@
+"""ViT / DeiT: the paper's own architecture family.
+
+Plain pre-norm ViT: patch embedding (conv-as-linear on flattened patches, or
+a stub taking precomputed patch embeddings), cls token, learned positional
+embeddings, bidirectional attention blocks, classification head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distrib.sharding import constrain
+from repro.models import blocks as blk
+from repro.models.common import (apply_norm, dense_init, dtype_of,
+                                 embed_init, init_norm)
+
+
+def num_patches(cfg) -> int:
+    return (cfg.img_size // cfg.patch) ** 2
+
+
+def init_vit(key, cfg):
+    ks = jax.random.split(key, 6 + cfg.n_layers)
+    dt = dtype_of(cfg)
+    N = num_patches(cfg)
+    params = {
+        "cls": jnp.zeros((1, 1, cfg.d_model), dt),
+        "pos": embed_init(ks[0], (1, N + 1, cfg.d_model), dt),
+        "final_norm": init_norm(ks[1], cfg),
+        "class_head": dense_init(ks[2], (cfg.d_model, cfg.n_classes), dt,
+                                 scale=0.02),
+        "head_bias": jnp.zeros((cfg.n_classes,), jnp.float32),
+    }
+    if cfg.frontend == "patch_conv":
+        pdim = cfg.patch * cfg.patch * 3
+        params["patch_w"] = dense_init(ks[3], (pdim, cfg.d_model), dt)
+        params["patch_b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    # scan-over-layers: homogeneous stack
+    def init_pos(k):
+        return blk.init_block(k, cfg, "attn", False)
+    pos_keys = jax.random.split(ks[4], cfg.n_layers)
+    params["seg0"] = {"p0": jax.vmap(init_pos)(pos_keys)}
+    return params
+
+
+def patchify(images, cfg):
+    """images: (B, H, W, 3) -> (B, N, p*p*3)."""
+    B, H, W, C = images.shape
+    p = cfg.patch
+    x = images.reshape(B, H // p, p, W // p, p, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // p) * (W // p),
+                                              p * p * C)
+    return x
+
+
+def apply_vit(params, inputs, cfg, *, taps=None, train=False, remat=None):
+    """inputs: images (B,H,W,3) if frontend='patch_conv', else patch
+    embeddings (B, N, D). Returns logits (B, n_classes)."""
+    dt = dtype_of(cfg)
+    if cfg.frontend == "patch_conv":
+        x = patchify(inputs.astype(dt), cfg) @ params["patch_w"] \
+            + params["patch_b"].astype(dt)
+    else:
+        x = inputs.astype(dt)
+    B, N, D = x.shape
+    cls = jnp.broadcast_to(params["cls"], (B, 1, D))
+    x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"][:, :N + 1].astype(dt)
+    x = constrain(x, "residual")
+    positions = jnp.broadcast_to(jnp.arange(N + 1, dtype=jnp.int32)[None],
+                                 (B, N + 1))
+
+    def body(carry, pslice):
+        x = carry
+        t = {} if taps is not None else None
+        x, _ = blk.apply_block(pslice["p0"], x, cfg, "attn", False,
+                               positions=positions, taps=t,
+                               mask_kind="full", train=train)
+        x = constrain(x, "residual")
+        return x, (t or {})
+
+    remat = train if remat is None else remat
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, ys = jax.lax.scan(body, x, params["seg0"])
+    if taps is not None:
+        for k, v in ys.items():
+            taps[f"seg0/p0/{k}"] = v
+    x = apply_norm(params["final_norm"], x, cfg)
+    pooled = x[:, 0] if cfg.pool == "cls" else x.mean(axis=1)
+    logits = pooled @ params["class_head"] + params["head_bias"].astype(dt)
+    return logits.astype(jnp.float32)
+
+
+def vit_loss(params, batch, cfg, *, train=True):
+    """batch: {'images' | 'embeds', 'labels' (B,)} -> CE loss."""
+    inputs = batch.get("images", batch.get("embeds"))
+    logits = apply_vit(params, inputs, cfg, train=train)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def vit_accuracy(params, inputs, labels, cfg):
+    logits = apply_vit(params, inputs, cfg)
+    return jnp.mean((jnp.argmax(logits, -1) == labels).astype(jnp.float32))

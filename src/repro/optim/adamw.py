@@ -1,0 +1,104 @@
+"""AdamW with ZeRO-shardable state, dtype knobs, masks, global clipping.
+
+State is a pytree shaped like the params (plus a scalar step), so the same
+param_specs sharding applies — on the production mesh the optimizer state is
+FSDP-sharded over ('pod','data') for the large configs (DESIGN.md §2.1).
+
+Masks:
+  * no weight decay on 1D params (norm scales, biases) and embeddings.
+  * frozen buffers (rope frequency tables 'rope_inv*') receive no update.
+
+dtype knobs: ``m_dtype='bfloat16'`` halves optimizer memory for the
+600B-class configs (napkin math in DESIGN.md §2.1); v stays fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _frozen(path: str) -> bool:
+    return "rope_inv" in path
+
+
+def _decayed(path: str, leaf) -> bool:
+    if leaf.ndim <= 1:
+        return False
+    if "embed" in path or "pos" in path or "cls" in path:
+        return False
+    return True
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    def mk(dtype):
+        return lambda p: jnp.zeros(p.shape, jnp.dtype(dtype))
+    return {
+        "m": jax.tree.map(mk(cfg.m_dtype), params),
+        "v": jax.tree.map(mk(cfg.v_dtype), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, lr, cfg: AdamWConfig = AdamWConfig()):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else 1.0
+    step = state["step"] + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    paths = [_path_str(kp) for kp, _ in flat_p[0]]
+    treedef = flat_p[1]
+    leaves_p = [x for _, x in flat_p[0]]
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state["m"])
+    leaves_v = treedef.flatten_up_to(state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for path, p, g, m, v in zip(paths, leaves_p, leaves_g, leaves_m,
+                                leaves_v):
+        if _frozen(path):
+            new_p.append(p)
+            new_m.append(m)
+            new_v.append(v)
+            continue
+        gf = g.astype(jnp.float32) * scale
+        mf = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * gf
+        vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(gf)
+        upd = (mf / b1c) / (jnp.sqrt(vf / b2c) + cfg.eps)
+        if cfg.weight_decay > 0 and _decayed(path, p):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(mf.astype(m.dtype))
+        new_v.append(vf.astype(v.dtype))
+
+    return (jax.tree_util.tree_unflatten(treedef, new_p),
+            {"m": jax.tree_util.tree_unflatten(treedef, new_m),
+             "v": jax.tree_util.tree_unflatten(treedef, new_v),
+             "step": step},
+            {"grad_norm": gnorm})

@@ -1,0 +1,63 @@
+"""Error-feedback int8 gradient compression (1-bit-Adam / EF-SGD family).
+
+At 1000+-node scale the data-parallel gradient reduce-scatter is a fixed
+wire cost per step; int8 quantization with error feedback cuts it 4x vs
+fp32 (2x vs bf16) with provably bounded bias (the residual is re-injected
+next step, so the compressed estimator telescopes).
+
+The quantize/dequantize pair below is the *algorithm*; on a real cluster it
+wraps the gradient tree immediately before the psum (the dry-run lowers the
+int8 all-reduce when REPRO_GRAD_COMPRESS=1). Convergence is validated in
+tests/test_substrate.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(params):
+    """Error-feedback residual state (same tree as params, fp32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _q8(x):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, ef_state):
+    """Returns (compressed int8 tree + scales, new ef_state).
+
+    The int8 tree is what crosses the wire (psum of int8 values upcast to
+    int32 accumulators on real hardware); the residual x - dq(q(x)) feeds
+    back into the next step.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = _q8(x)
+        resid = x - _dq8(q, scale)
+        return (q, scale), resid
+
+    flat, treedef = jax.tree_util.tree_flatten(grads)
+    eflat = treedef.flatten_up_to(ef_state)
+    qs, resids = zip(*[one(g, e) for g, e in zip(flat, eflat)])
+    return (jax.tree_util.tree_unflatten(treedef, [q for q, _ in qs]),
+            jax.tree_util.tree_unflatten(treedef, [s for _, s in qs])), \
+        jax.tree_util.tree_unflatten(treedef, list(resids))
+
+
+def decompress_grads(compressed):
+    qt, st = compressed
+    return jax.tree.map(lambda q, s: _dq8(q, s), qt, st)
+
+
+def ef_round_trip(grads, ef_state):
+    """Quantize -> (wire) -> dequantize with error feedback carried."""
+    compressed, new_ef = compress_grads(grads, ef_state)
+    return decompress_grads(compressed), new_ef

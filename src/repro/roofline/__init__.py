@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (HW, analyze_compiled, model_flops,
+                                     params_count)
+
+__all__ = ["HW", "analyze_compiled", "model_flops", "params_count"]

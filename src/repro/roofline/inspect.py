@@ -1,0 +1,70 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""HLO inspector: top collectives and largest buffers for one dry-run cell.
+
+    PYTHONPATH=src python -m repro.roofline.inspect --arch granite-8b \
+        --shape decode_32k --mesh single [--sparsity 0.5]
+"""
+import argparse      # noqa: E402
+import collections   # noqa: E402
+import re            # noqa: E402
+
+from repro.roofline.analysis import _OP_RE, _shape_bytes  # noqa: E402
+
+
+def top_collectives(text, k=12):
+    agg = collections.Counter()
+    for m in _OP_RE.finditer(text):
+        shapes, kind = m.group(1), m.group(2)
+        line_end = text.find("\n", m.end())
+        line = text[max(0, m.start() - 120):line_end]
+        op_name = ""
+        nm = re.search(r'op_name="([^"]+)"', text[m.end():line_end])
+        if nm:
+            op_name = nm.group(1)[-90:]
+        agg[(kind, _shape_bytes(shapes), op_name)] += 1
+    rows = sorted(((b * c, kind, b, c, nm)
+                   for (kind, b, nm), c in agg.items()), reverse=True)
+    return rows[:k]
+
+
+def big_buffers(text, k=12):
+    sizes = collections.Counter()
+    for m in re.finditer(r"=\s*([a-z0-9]+\[[0-9,]*\])[^ ]*\s+(\S+)\(", text):
+        b = _shape_bytes(m.group(1))
+        if b > (1 << 28):
+            sizes[(m.group(2)[:20], m.group(1))] += 1
+    return sorted(((b_ := _shape_bytes(sh)) * c, op, sh, c)
+                  for (op, sh), c in sizes.items())[::-1][:k]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--sparsity", type=float, default=0.0)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import build_lowering
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, cfg, shape, lflops = build_lowering(args.arch, args.shape, mesh,
+                                                 sparsity=args.sparsity)
+    with mesh:
+        compiled = lowered.compile()
+    text = compiled.as_text()
+    print("== top collectives (bytes x count) ==")
+    for total, kind, b, c, nm in top_collectives(text):
+        print(f"{total/1e9:9.3f} GB  {kind:18s} {b/1e6:10.1f}MB x{c:3d}  {nm}")
+    print("== largest buffers ==")
+    for total, op, sh, c in big_buffers(text):
+        print(f"{total/1e9:9.3f} GB  {op:20s} {sh} x{c}")
+    mem = compiled.memory_analysis()
+    print(f"peak: args={mem.argument_size_in_bytes/1e9:.1f}GB "
+          f"temp={mem.temp_size_in_bytes/1e9:.1f}GB")
+
+
+if __name__ == "__main__":
+    main()

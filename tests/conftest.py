@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Smoke tests and benches see the single real CPU device; only the dry-run
+# entry point forces 512 host devices (per assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

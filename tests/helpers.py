@@ -1,0 +1,55 @@
+"""Shared test fixtures/utilities."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+
+
+def tiny_cfg(arch: str, **kw):
+    cfg = reduced(get_config(arch)).replace(dtype="float32", **kw)
+    if cfg.moe is not None:
+        # avoid capacity drops so algebraic identities hold exactly
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    return cfg
+
+
+def batch_for(cfg, B=2, T=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    if cfg.family == "vit":
+        return {"images": jax.random.normal(
+            k, (B, cfg.img_size, cfg.img_size, 3)),
+            "labels": jnp.zeros((B,), jnp.int32)}
+    b = {"tokens": jax.random.randint(k, (B, T), 0, cfg.vocab_size),
+         "labels": jax.random.randint(jax.random.fold_in(k, 1), (B, T), 0,
+                                      cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(jax.random.fold_in(k, 2),
+                                        (B, T, cfg.d_model))
+    if cfg.frontend == "patch_stub":
+        b["patch_embeds"] = jax.random.normal(jax.random.fold_in(k, 3),
+                                              (B, 4, cfg.d_model))
+    return b
+
+
+def calib_factory(cfg, n=4, B=4, T=24, seed=100):
+    def make():
+        for i in range(n):
+            b = batch_for(cfg, B=B, T=T, seed=seed + i)
+            b.pop("labels", None)
+            yield b
+    return make
+
+
+def out_of(model, params, batch):
+    y = model.apply(params, batch)
+    return y[0] if isinstance(y, tuple) else y
+
+
+def mse(a, b):
+    return float(jnp.mean(jnp.square((a - b).astype(jnp.float32))))

@@ -1,0 +1,199 @@
+"""CORP attention compensation: closed-form identities (App. B.2/C.2).
+
+  * the Kronecker ridge solution matches a direct vectorized lstsq over the
+    calibration samples (Eq. 15)
+  * the SVD fold reproduces I + M exactly (Eq. 16)
+  * J* = sum ||T_b||^2 - h^T G^+ h matches the empirical logit residual
+    (Prop C.2.1) and the gain is non-negative (Prop C.2.2)
+  * rope-aware classes: the diagonal complex/real compensators commute with
+    rotary phases — folded pre-rope weights reproduce the post-rope
+    compensated logits exactly
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solve as S
+
+
+def qk_samples(rng, n, t, d, corr=True):
+    qs, ks = [], []
+    for _ in range(n):
+        q = rng.randn(t, d).astype(np.float32)
+        k = rng.randn(t, d).astype(np.float32)
+        if corr:
+            mix = np.eye(d) + 0.5 * rng.randn(d, d) / np.sqrt(d)
+            q = q @ mix.astype(np.float32)
+            k = k @ mix.astype(np.float32).T
+        qs.append(q)
+        ks.append(k)
+    return qs, ks
+
+
+def build_G_h(qs, ks, keep_n):
+    """Accumulate paper Eq. 15 inputs (row-major vec convention)."""
+    d = qs[0].shape[1]
+    ds = keep_n
+    G = np.zeros((ds * ds, ds * ds))
+    h = np.zeros(ds * ds)
+    t2 = 0.0
+    for q, k in zip(qs, ks):
+        qS, qP = q[:, :ds], q[:, ds:]
+        kS, kP = k[:, :ds], k[:, ds:]
+        A = qS.T @ qS
+        C = kS.T @ kS
+        G += np.einsum("ij,lk->iljk", A, C).reshape(ds * ds, ds * ds)
+        h += (qS.T @ qP @ kP.T @ kS).reshape(-1)
+        t2 += np.sum((qP @ kP.T) ** 2)
+    return G, h, t2
+
+
+def test_kron_solution_matches_direct_lstsq():
+    rng = np.random.RandomState(0)
+    d, ds, t, n = 8, 5, 32, 12
+    qs, ks = qk_samples(rng, n, t, d)
+    G, h, t2 = build_G_h(qs, ks, ds)
+    sol = S.solve_full_m(jnp.asarray(G, jnp.float32),
+                         jnp.asarray(h, jnp.float32), t2, lam=1e-8)
+    # direct: stack rows of the linear system T_b ~ Q_S M K_S^T over b
+    rows, tgt = [], []
+    for q, k in zip(qs, ks):
+        qS, kS = q[:, :ds], k[:, :ds]
+        T = q[:, ds:] @ k[:, ds:].T
+        # vec_row(Q M K^T) = (Q kron K) vec_row(M)
+        rows.append(np.kron(qS, kS))
+        tgt.append(T.reshape(-1))
+    A = np.concatenate(rows)
+    y = np.concatenate(tgt)
+    m_direct, *_ = np.linalg.lstsq(A, y, rcond=None)
+    np.testing.assert_allclose(np.asarray(sol["M"]).reshape(-1), m_direct,
+                               rtol=5e-2, atol=5e-3)
+
+
+def test_svd_fold_reproduces_I_plus_M():
+    rng = np.random.RandomState(1)
+    ds = 6
+    M = jnp.asarray(rng.randn(ds, ds).astype(np.float32) * 0.3)
+    fq, fk = S.fold_full_m(M)
+    np.testing.assert_allclose(np.asarray(fq @ fk.T),
+                               np.eye(ds) + np.asarray(M), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_attention_distortion_matches_empirical():
+    rng = np.random.RandomState(2)
+    d, ds, t, n = 10, 6, 24, 16
+    qs, ks = qk_samples(rng, n, t, d)
+    G, h, t2 = build_G_h(qs, ks, ds)
+    sol = S.solve_full_m(jnp.asarray(G, jnp.float32),
+                         jnp.asarray(h, jnp.float32), t2, lam=1e-8)
+    M = np.asarray(sol["M"])
+    emp = 0.0
+    for q, k in zip(qs, ks):
+        T = q[:, ds:] @ k[:, ds:].T
+        emp += np.sum((T - q[:, :ds] @ M @ k[:, :ds].T) ** 2)
+    assert float(sol["j_star"]) == pytest.approx(emp, rel=2e-2)
+    assert 0.0 <= float(sol["rho2"]) <= 1.0
+    assert float(sol["j_star"]) <= t2 * (1 + 1e-6)     # gain >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 9999), ds=st.integers(2, 6))
+def test_attention_gain_nonnegative_property(seed, ds):
+    rng = np.random.RandomState(seed)
+    d = ds + rng.randint(1, 5)
+    qs, ks = qk_samples(rng, 6, 16, d, corr=bool(seed % 2))
+    G, h, t2 = build_G_h(qs, ks, ds)
+    sol = S.solve_full_m(jnp.asarray(G, jnp.float32),
+                         jnp.asarray(h, jnp.float32), t2, lam=1e-6)
+    assert float(sol["j_star"]) <= t2 * (1 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rope-aware classes (beyond-paper, DESIGN.md §2.2)
+# ---------------------------------------------------------------------------
+
+def rope_rotate(x, pos, theta=100.0):
+    d = x.shape[-1]
+    inv = 1.0 / theta ** (np.arange(0, d, 2) / d)
+    ang = pos[:, None] * inv[None, :]
+    c, s = np.cos(ang), np.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = np.empty_like(x)
+    out[..., 0::2] = x1 * c - x2 * s
+    out[..., 1::2] = x2 * c + x1 * s
+    return out
+
+
+def test_diag_complex_fold_commutes_with_rope():
+    """Folding the per-pair 2x2 blocks pre-rope reproduces the compensated
+    post-rope logits: rope(q F_q) rope(k F_k)^T == Re(qc (1+m) conj(kc))
+    with phases — verified numerically end-to-end."""
+    rng = np.random.RandomState(3)
+    t, dp = 12, 4                  # dp kept pairs
+    d = 2 * dp
+    q = rng.randn(t, d).astype(np.float32)
+    k = rng.randn(t, d).astype(np.float32)
+    pos = np.arange(t).astype(np.float32)
+    m = (rng.randn(dp) * 0.3 + 1j * rng.randn(dp) * 0.3).astype(np.complex64)
+    fq, fk = S.fold_diag_complex(jnp.asarray(m))
+    fq, fk = np.asarray(fq), np.asarray(fk)
+
+    def apply_blocks(x, blocks):
+        xp = x.reshape(t, dp, 2)
+        return np.einsum("tpi,pij->tpj", xp, blocks).reshape(t, d)
+
+    # folded path: fold pre-rope, then rotate, then plain dot
+    lq = rope_rotate(apply_blocks(q, fq), pos)
+    lk = rope_rotate(apply_blocks(k, fk), pos)
+    logits_fold = lq @ lk.T
+
+    # reference path: rotate first, then apply diag(1+m) in complex space
+    qc = rope_rotate(q, pos)
+    kc = rope_rotate(k, pos)
+    qz = qc[:, 0::2] + 1j * qc[:, 1::2]
+    kz = kc[:, 0::2] + 1j * kc[:, 1::2]
+    logits_ref = np.real(qz @ np.diag(1 + m) @ np.conj(kz).T)
+    np.testing.assert_allclose(logits_fold, logits_ref, rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_diag_complex_solver_reduces_residual():
+    rng = np.random.RandomState(4)
+    t, dp_keep, dp_full, n = 24, 4, 7, 10
+    Gd = np.zeros((dp_keep, dp_keep), np.complex64)
+    hd = np.zeros(dp_keep, np.complex64)
+    t2 = 0.0
+    samples = []
+    for _ in range(n):
+        qz = (rng.randn(t, dp_full) + 1j * rng.randn(t, dp_full)) \
+            .astype(np.complex64)
+        kz = (qz * 0.5 + 0.5 * (rng.randn(t, dp_full)
+                                + 1j * rng.randn(t, dp_full))) \
+            .astype(np.complex64)
+        qS, qP = qz[:, :dp_keep], qz[:, dp_keep:]
+        kS, kP = kz[:, :dp_keep], kz[:, dp_keep:]
+        A = np.conj(qS).T @ qS
+        C = np.conj(kS).T @ kS
+        Gd += A * C.T
+        hd += np.diag(np.conj(qS).T @ qP @ np.conj(kP).T @ kS)
+        t2 += np.sum(np.abs(qP @ np.conj(kP).T) ** 2)
+        samples.append((qS, qP, kS, kP))
+    sol = S.solve_diag_complex(jnp.asarray(Gd), jnp.asarray(hd), t2, 1e-6)
+    m = np.asarray(sol["m"])
+    emp = sum(np.sum(np.abs(qP @ np.conj(kP).T
+                            - qS @ np.diag(m) @ np.conj(kS).T) ** 2)
+              for qS, qP, kS, kP in samples)
+    assert float(sol["j_star"]) == pytest.approx(float(emp), rel=3e-2)
+    assert float(sol["j_star"]) <= t2   # compensation helps
+
+
+def test_diag_real_fold_sign_and_scale():
+    m = jnp.asarray([0.5, -2.5, 0.0])
+    sq, sk = S.fold_diag_real(m)
+    np.testing.assert_allclose(np.asarray(sq) * np.asarray(sk),
+                               np.asarray(1 + m), rtol=1e-6)

@@ -1,0 +1,127 @@
+"""CORP MLP compensation: closed-form identities (paper App. B.1/C.1).
+
+These validate the *algebra* of the paper exactly — hardware-independent:
+  * ridge solution matches direct least-squares on the calibration data
+  * the folded layer equals the affine-compensated layer
+  * distortion formula J* = tr(W_P Sigma_{P|S} W_P^T) matches the empirical
+    residual (Prop C.1.1)
+  * compensation gain is non-negative and matches Eq. 64 (Prop C.1.2)
+  * compensation never hurts vs naive pruning (strict improvement)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import solve as S
+
+
+def make_data(rng, n, f, lowrank=None):
+    if lowrank:
+        basis = rng.randn(lowrank, f)
+        x = rng.randn(n, lowrank) @ basis + 0.05 * rng.randn(n, f)
+    else:
+        x = rng.randn(n, f)
+    return (x + rng.randn(f) * 0.5).astype(np.float32)
+
+
+def moments(x):
+    return {"n": jnp.asarray(float(x.shape[0])),
+            "s1": jnp.asarray(x.sum(0)), "s2": jnp.asarray(x.T @ x)}
+
+
+@pytest.mark.parametrize("f,keep_n", [(16, 8), (24, 18), (12, 3)])
+def test_ridge_matches_direct_lstsq(f, keep_n):
+    rng = np.random.RandomState(0)
+    x = make_data(rng, 400, f, lowrank=f // 2)
+    keep = jnp.arange(keep_n)
+    prune = jnp.arange(keep_n, f)
+    mu, sigma = S.mlp_cov(moments(x))
+    lam = 1e-6
+    sol = S.ridge_affine(mu, sigma, keep, prune, lam)
+    # direct: centered least squares X_P ~ B X_S
+    xc = x - x.mean(0)
+    B_direct, *_ = np.linalg.lstsq(xc[:, :keep_n], xc[:, keep_n:],
+                                   rcond=None)
+    np.testing.assert_allclose(np.asarray(sol["B"]), B_direct.T, rtol=1e-2,
+                               atol=1e-3)
+    c_direct = x[:, keep_n:].mean(0) - B_direct.T @ x[:, :keep_n].mean(0)
+    np.testing.assert_allclose(np.asarray(sol["c"]), c_direct, rtol=1e-2,
+                               atol=1e-3)
+
+
+def test_fold_equals_affine_compensation():
+    """(W_S + W_P B) x_S + (b + W_P c) == W_S x_S + W_P (B x_S + c) + b."""
+    rng = np.random.RandomState(1)
+    f, d, keep_n = 20, 6, 12
+    x = make_data(rng, 300, f, lowrank=8)
+    w = rng.randn(f, d).astype(np.float32)    # y = h @ w
+    b = rng.randn(d).astype(np.float32)
+    keep, prune = jnp.arange(keep_n), jnp.arange(keep_n, f)
+    mu, sigma = S.mlp_cov(moments(x))
+    sol = S.ridge_affine(mu, sigma, keep, prune, 1e-6)
+    w_fold = w[:keep_n] + np.asarray(sol["B"]).T @ w[keep_n:]
+    b_fold = b + np.asarray(sol["c"]) @ w[keep_n:]
+    xs = x[:5, :keep_n]
+    xp_hat = xs @ np.asarray(sol["B"]).T + np.asarray(sol["c"])
+    y_affine = xs @ w[:keep_n] + xp_hat @ w[keep_n:] + b
+    y_fold = xs @ w_fold + b_fold
+    np.testing.assert_allclose(y_fold, y_affine, rtol=1e-4, atol=1e-4)
+
+
+def test_distortion_formula_matches_empirical():
+    """Prop C.1.1: J* equals the mean squared residual on the fit data."""
+    rng = np.random.RandomState(2)
+    f, d, keep_n = 18, 5, 10
+    x = make_data(rng, 5000, f, lowrank=9)
+    w = rng.randn(f, d).astype(np.float32)
+    keep, prune = jnp.arange(keep_n), jnp.arange(keep_n, f)
+    mu, sigma = S.mlp_cov(moments(x))
+    sol = S.ridge_affine(mu, sigma, keep, prune, 1e-8)
+    diag = S.mlp_distortion(sol, jnp.asarray(w[keep_n:]))
+    xp_hat = x[:, :keep_n] @ np.asarray(sol["B"]).T + np.asarray(sol["c"])
+    resid = (x[:, keep_n:] - xp_hat) @ w[keep_n:]
+    emp = float(np.mean(np.sum(resid ** 2, -1)))
+    assert float(diag["j_star"]) == pytest.approx(emp, rel=2e-2)
+    # uncompensated: residual = W_P x_P
+    emp_un = float(np.mean(np.sum((x[:, keep_n:] @ w[keep_n:]) ** 2, -1)))
+    assert float(diag["j_uncomp"]) == pytest.approx(emp_un, rel=2e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(f=st.integers(6, 24), frac=st.floats(0.2, 0.8),
+       seed=st.integers(0, 10_000), lowrank=st.booleans())
+def test_gain_nonnegative_property(f, frac, seed, lowrank):
+    """Prop C.1.2: compensation gain >= 0 for ANY data/split (hypothesis)."""
+    rng = np.random.RandomState(seed)
+    keep_n = max(1, min(f - 1, int(f * frac)))
+    x = make_data(rng, 200, f, lowrank=max(2, f // 2) if lowrank else None)
+    perm = rng.permutation(f)
+    keep = jnp.asarray(np.sort(perm[:keep_n]))
+    prune = jnp.asarray(np.sort(perm[keep_n:]))
+    w = rng.randn(f, 4).astype(np.float32)
+    mu, sigma = S.mlp_cov(moments(x))
+    sol = S.ridge_affine(mu, sigma, keep, prune, 1e-6)
+    diag = S.mlp_distortion(sol, jnp.asarray(np.asarray(w)[np.asarray(prune)]))
+    gain = float(diag["gain"])
+    assert gain >= -1e-3 * max(1.0, abs(float(diag["j_uncomp"])))
+    assert float(diag["j_star"]) <= float(diag["j_uncomp"]) * (1 + 1e-5)
+
+
+def test_lossfree_when_linearly_dependent():
+    """Pruned channels exactly predictable -> J* ~ 0 (paper: 'loss-free
+    iff W_P Sigma_{P|S}^{1/2} = 0')."""
+    rng = np.random.RandomState(3)
+    f, keep_n = 12, 8
+    xs = rng.randn(1000, keep_n).astype(np.float32)
+    A = rng.randn(keep_n, f - keep_n).astype(np.float32)
+    x = np.concatenate([xs, xs @ A + 1.5], axis=1)
+    keep, prune = jnp.arange(keep_n), jnp.arange(keep_n, f)
+    mu, sigma = S.mlp_cov(moments(x))
+    sol = S.ridge_affine(mu, sigma, keep, prune, 1e-8)
+    w = rng.randn(f - keep_n, 4).astype(np.float32)
+    diag = S.mlp_distortion(sol, jnp.asarray(w))
+    assert float(diag["j_star"]) < 1e-3 * float(diag["j_uncomp"])

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (assignment requirement (f)).
+
+Each assigned architecture instantiates a REDUCED same-family config and
+runs one forward + one train step on CPU, asserting output shapes and
+finiteness. The FULL configs are exercised only via the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+from helpers import batch_for, tiny_cfg
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS + ("deit-base",))
+def test_smoke_forward_and_train_step(arch):
+    cfg = tiny_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = batch_for(cfg, B=2, T=16)
+
+    out = model.apply(params, batch)
+    y = out[0] if isinstance(out, tuple) else out
+    B = batch.get("tokens", batch.get("images")).shape[0]
+    if cfg.family == "vit":
+        assert y.shape == (B, cfg.n_classes)
+    else:
+        assert y.shape[0] == B and y.shape[-1] == cfg.padded_vocab
+    assert np.all(np.isfinite(np.asarray(y, np.float32)))
+
+    # one train step
+    ocfg = AdamWConfig()
+    opt = adamw_init(params, ocfg)
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+    assert np.isfinite(float(loss))
+    new_p, new_o, m = adamw_update(params, grads, opt, 1e-3, ocfg)
+    assert np.isfinite(float(m["grad_norm"]))
+    # params actually changed
+    d = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                  - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_p)))
+    assert d > 0
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "gemma3-1b", "rwkv6-3b",
+                                  "jamba-1.5-large-398b",
+                                  "deepseek-v3-671b",
+                                  "seamless-m4t-large-v2"])
+def test_smoke_decode_matches_forward(arch):
+    cfg = tiny_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(jax.random.PRNGKey(2),
+                                            (B, 8, cfg.d_model))
+    full = model.apply(params, batch)[0]
+    pre = dict(batch, tokens=toks[:, :T - 2])
+    lg, cache = model.prefill(params, pre, T + 4)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(full[:, T - 3]), rtol=2e-3,
+                               atol=2e-3)
+    for t in range(T - 2, T):
+        lg, cache = model.decode_step(params, toks[:, t:t + 1], cache)
+        np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                                   np.asarray(full[:, t]), rtol=2e-3,
+                                   atol=2e-3)
+
+
+def test_full_config_dims_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    expect = {
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "gemma3-1b": (26, 1152, 4, 1, 6912, 262144),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151936),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    }
+    for arch, (L, D, H, KV, F, V) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+                c.vocab_size) == (L, D, H, KV, F, V), arch
+    # structural features
+    assert get_config("deepseek-v3-671b").moe.num_experts == 256
+    assert get_config("deepseek-v3-671b").moe.top_k == 8
+    assert get_config("deepseek-v3-671b").mla is not None
+    assert get_config("qwen3-moe-235b-a22b").moe.num_experts == 128
+    assert get_config("jamba-1.5-large-398b").moe.num_experts == 16
+    assert get_config("jamba-1.5-large-398b").pattern.count("mamba") == 7
+    assert get_config("gemma3-1b").pattern.count("swa") == 5
+    assert get_config("rwkv6-3b").pattern == ("rwkv",)
+    assert get_config("qwen2-1.5b").qkv_bias
+
+
+def test_param_counts_in_range():
+    """Total parameter counts should be near the advertised sizes."""
+    from repro.roofline import params_count
+    approx = {
+        "granite-8b": (7e9, 10e9),
+        "deepseek-7b": (6e9, 8e9),
+        "qwen2-1.5b": (1.2e9, 2.2e9),
+        "deepseek-v3-671b": (600e9, 720e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "jamba-1.5-large-398b": (330e9, 420e9),
+        "rwkv6-3b": (2.5e9, 4e9),
+        "internvl2-26b": (18e9, 24e9),   # LM backbone only (frontend stub)
+    }
+    for arch, (lo, hi) in approx.items():
+        n = params_count(get_config(arch))["total"]
+        assert lo <= n <= hi, f"{arch}: {n:.3e}"
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = tiny_cfg("qwen3-moe-235b-a22b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = batch_for(cfg, B=2, T=32)
+    loss = model.loss(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_long_context_flags():
+    assert not get_config("granite-8b").is_subquadratic
+    assert get_config("gemma3-1b").is_subquadratic
+    assert get_config("rwkv6-3b").is_subquadratic
+    assert get_config("jamba-1.5-large-398b").is_subquadratic
