@@ -1,0 +1,126 @@
+"""Calibration throughput: fused CalibrationEngine vs per-unit loop.
+
+CORP's entire cost is the calibration pass, so this is the number behind the
+paper's "under 20 minutes on a single GPU" claim. Two ways to gather the
+same pass-1 statistics:
+
+  legacy  — one jitted statistics step PER UNIT, each re-running the full
+            model forward for its taps (what a naive per-unit implementation
+            does; identical to corp_prune_streamed with unit_group_size=1),
+            with host-side tree-adds between batches;
+  fused   — repro.core.calibrate.CalibrationEngine: ONE jitted step per
+            batch reduces every unit's statistics from a single forward,
+            accumulating into a donated on-device pytree.
+
+Both produce identical statistics (linearity); the fused engine does ~1/U
+of the forward work for U units plus zero host round-trips, so its
+tokens/sec must come out >= the loop — asserted at the end so regressions
+fail loudly in CI.
+
+Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_calibration.py
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config, reduced  # noqa: E402
+from repro.core import CalibrationEngine, discover_units  # noqa: E402
+from repro.core import stats as stats_mod  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+
+def _batches(cfg, n, B, seed=0):
+    k = jax.random.PRNGKey(seed)
+    return [{"images": jax.random.normal(
+        jax.random.fold_in(k, i), (B, cfg.img_size, cfg.img_size, 3))}
+        for i in range(n)]
+
+
+def _tokens(cfg, batches):
+    n_tok = (cfg.img_size // cfg.patch) ** 2 + 1      # patches + cls
+    return sum(b["images"].shape[0] for b in batches) * n_tok
+
+
+def build_legacy_steps(model, units):
+    """One separately-jitted stats step per unit, built once so repeats
+    measure execution (forwards + host tree-adds), not retracing."""
+    return [jax.jit(stats_mod.make_stats_step(model, [u], phase=1))
+            for u in units]
+
+
+def run_legacy(steps, params, batches):
+    """Per-unit loop: each unit's step re-runs the model forward for its
+    taps, with a host-side tree-add between batches."""
+    merged = {}
+    for step in steps:
+        total = None
+        for batch in batches:
+            total = stats_mod.tree_add(total, step(params, batch))
+        merged.update(jax.device_get(total))
+    return merged
+
+
+def run_fused(engine, params, batches):
+    return engine.run(params, batches)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deit-base")
+    ap.add_argument("--batches", type=int, default=8)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch)).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    units = discover_units(cfg)
+    batches = _batches(cfg, args.batches, args.batch_size)
+    n_tok = _tokens(cfg, batches)
+    engine = CalibrationEngine(model, units, phase=1)
+    legacy_steps = build_legacy_steps(model, units)
+
+    # warmup both paths (compile), check parity while we are at it
+    fused0 = run_fused(engine, params, batches[:1])
+    legacy0 = run_legacy(legacy_steps, params, batches[:1])
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4), fused0, legacy0)
+
+    def timeit(fn):
+        best = float("inf")
+        for _ in range(args.repeats):
+            t0 = time.perf_counter()
+            out = fn()
+            jax.block_until_ready(jax.tree.leaves(out))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_legacy = timeit(lambda: run_legacy(legacy_steps, params, batches))
+    t_fused = timeit(lambda: run_fused(engine, params, batches))
+    tps_legacy = n_tok / t_legacy
+    tps_fused = n_tok / t_fused
+
+    print("name,us_per_call,derived")
+    print(f"calib_legacy_per_unit_loop,{t_legacy*1e6:.0f},"
+          f"{tps_legacy:.0f} tok/s ({len(units)} units)")
+    print(f"calib_fused_engine,{t_fused*1e6:.0f},"
+          f"{tps_fused:.0f} tok/s (speedup {t_legacy/t_fused:.2f}x)")
+
+    assert tps_fused >= tps_legacy, (
+        f"fused engine slower than per-unit loop: "
+        f"{tps_fused:.0f} < {tps_legacy:.0f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -6,6 +6,22 @@
 4. report Top-1 / parameters / FLOPs — the Table-2 protocol.
 
 Run:  PYTHONPATH=src python examples/quickstart.py [--steps 300]
+
+Calibration under the hood: ``corp_prune`` streams statistics through the
+fused ``repro.core.calibrate.CalibrationEngine`` — one jitted step per
+calibration batch runs the model once and reduces every unit's statistics
+into a donated on-device accumulator (second moments via the Pallas gram
+kernel on TPU). The engine is also usable standalone, e.g. to inspect
+activation statistics without pruning::
+
+    from repro.core import CalibrationEngine, discover_units
+    engine = CalibrationEngine(model, discover_units(model.cfg), phase=1)
+    stats = engine.run(params, calib_batches())   # {unit: {n, s1, s2, na}}
+
+Long passes checkpoint + resume via ``corp_prune(..., ckpt_dir=...)``
+(see repro.distrib.fault.CalibrationCheckpointer), and
+``benchmarks/bench_calibration.py`` tracks fused-vs-per-unit-loop
+throughput.
 """
 import argparse
 import os

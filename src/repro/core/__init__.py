@@ -1,15 +1,18 @@
 """CORP: closed-form one-shot representation-preserving structured pruning.
 
 The paper's primary contribution as a composable JAX module:
-  stats    - distributed streaming calibration statistics (psum-reducible)
-  ranking  - activation/magnitude/combined/active + logit-energy policies
-  solve    - closed-form ridge solvers (affine, Kronecker, rope-aware) + folds
-  pruner   - Alg. 1 orchestration: calibrate -> rank -> compensate -> fold
-  units    - prunable-structure discovery across all model families
+  stats     - distributed streaming calibration statistics (psum-reducible)
+  calibrate - fused single-forward CalibrationEngine (donated accumulator,
+              Pallas gram second moments, checkpointable stat pytrees)
+  ranking   - activation/magnitude/combined/active + logit-energy policies
+  solve     - closed-form ridge solvers (affine, Kronecker, rope-aware) + folds
+  pruner    - Alg. 1 orchestration: calibrate -> rank -> compensate -> fold
+  units     - prunable-structure discovery across all model families
 """
+from repro.core.calibrate import CalibrationEngine
 from repro.core.pruner import (PruneConfig, corp_prune,
                                corp_prune_streamed)
 from repro.core.units import Unit, discover_units
 
-__all__ = ["PruneConfig", "corp_prune", "corp_prune_streamed",
-           "Unit", "discover_units"]
+__all__ = ["CalibrationEngine", "PruneConfig", "corp_prune",
+           "corp_prune_streamed", "Unit", "discover_units"]

@@ -1,0 +1,166 @@
+"""Single-pass fused calibration engine for CORP (Alg. 3 inputs).
+
+CORP's entire cost is the calibration pass, so how statistics stream out of
+activations decides whether the paper's "under 20 minutes on one device"
+claim holds. ``CalibrationEngine`` owns that hot path:
+
+  * **one forward per batch** — a single jitted step runs the model once and
+    reduces *every* unit's statistics (MLP/MoE/mamba moments, attention
+    logit energies for pass 1; ridge-system inputs for pass 2) from the
+    taps of that one forward, instead of a per-unit loop of separately
+    jitted steps that each re-run the model;
+  * **donated on-device accumulator** — the statistics pytree stays on
+    device across the whole pass and the previous accumulator's buffers are
+    donated to each step (``donate_argnums=0``), so accumulation is
+    in-place with no host round-trip per batch; only the final result is
+    fetched;
+  * **checkpointable** — the accumulator is an ordinary pytree of sums, so
+    any prefix of the stream is a valid checkpoint. Pass a
+    ``repro.distrib.fault.CalibrationCheckpointer`` to make a long pass
+    resumable (batches are deterministic-by-index; the restored batch
+    cursor skips what was already consumed);
+  * **second moments through the Pallas gram kernel** — the per-unit
+    ``X^T X`` reductions inside the step dispatch to
+    ``repro.kernels.gram`` (streaming MXU kernel on TPU, zero-padded for
+    arbitrary shapes; plain-jnp reference elsewhere).
+
+Usage::
+
+    engine = CalibrationEngine(model, units, phase=1)
+    stats  = engine.run(params, calib_batches())            # pass 1
+    engine2 = CalibrationEngine(model, units, phase=2, plan=plan)
+    p2     = engine2.run(params, calib_batches())           # pass 2
+
+Every statistic is a linear reduction, so under pjit the per-batch sums
+compile to psums over the data axes and the engine distributes unchanged.
+``benchmarks/bench_calibration.py`` records fused-vs-per-unit-loop
+throughput.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stats as stats_mod
+from repro.core.units import Unit
+
+
+class CalibrationEngine:
+    """Fused streaming statistics gatherer for one calibration pass.
+
+    Args:
+      model: model object exposing ``apply(params, batch, taps=...)``.
+      units: prunable units whose statistics to gather (all in one forward).
+      phase: 1 (ranking/MLP moments + attention energies) or 2 (attention
+        compensation ridge inputs; requires ``plan``).
+      plan: phase-2 only — ``{unit.name: (keep, prune)}`` index arrays.
+      donate: donate the accumulator's buffers to each step (in-place
+        accumulation). Disable when the caller needs the pre-step
+        accumulator to survive a failing step (see ``fail_hook``).
+    """
+
+    def __init__(self, model, units: List[Unit], *, phase: int = 1,
+                 plan: Optional[Dict] = None, donate: bool = True):
+        assert phase in (1, 2), phase
+        assert phase == 1 or plan is not None, "phase 2 needs a keep/prune plan"
+        self.model = model
+        self.units = list(units)
+        self.phase = phase
+        self.plan = None if plan is None else {
+            k: tuple(jnp.asarray(a) for a in v) for k, v in plan.items()}
+
+        def reduce_fn(params, batch):
+            taps = {}
+            model.apply(params, batch, taps=taps)
+            if phase == 1:
+                return stats_mod.pass1_reduce(taps, self.units, model.cfg)
+            return stats_mod.pass2_reduce(taps, self.units, self.plan)
+
+        def step(acc, params, batch):
+            return jax.tree.map(jnp.add, acc, reduce_fn(params, batch))
+
+        self._reduce = reduce_fn
+        self._step = jax.jit(step, donate_argnums=(0,) if donate else ())
+        self.fingerprint = self._fingerprint()
+
+    def _fingerprint(self) -> str:
+        """Identity of what this engine accumulates — phase, unit set, and
+        (for pass 2) the exact keep/prune plan. Stored with every stats
+        checkpoint so a reused checkpoint directory can never resume
+        statistics gathered for a different configuration."""
+        h = hashlib.sha256()
+        h.update(f"phase={self.phase}".encode())
+        for u in self.units:
+            h.update(f";{u.name}:{u.kind}:{u.attn_class}".encode())
+        if self.plan is not None:
+            for k in sorted(self.plan):
+                h.update(f";plan:{k}".encode())
+                for a in self.plan[k]:
+                    h.update(np.asarray(a).tobytes())
+        return h.hexdigest()[:16]
+
+    # -- accumulator lifecycle ------------------------------------------------
+
+    def init_stats(self, params, batch):
+        """Zeros pytree matching one batch's statistics (via eval_shape —
+        no forward is executed)."""
+        shapes = jax.eval_shape(self._reduce, params, batch)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+    def update(self, acc, params, batch):
+        """One fused step: acc + stats(batch), on device. ``acc``'s buffers
+        are donated — use the return value, not the argument."""
+        return self._step(acc, params, batch)
+
+    # -- driver ---------------------------------------------------------------
+
+    def run(self, params, batches: Iterable, *, checkpointer=None,
+            fail_hook: Optional[Callable[[int], None]] = None) -> Dict:
+        """Stream ``batches`` through the fused step; returns host stats.
+
+        checkpointer: optional ``fault.CalibrationCheckpointer`` — restores
+          the newest valid stats checkpoint (skipping the already-consumed
+          stream prefix) and saves the accumulator every N batches.
+        fail_hook: optional ``hook(i)`` called before batch ``i``; if it
+          raises, the batch is dropped and the pass continues (the
+          bounded-staleness mode of ``repro.distrib.fault`` — statistics
+          carry their own sample counts, so dropped batches only shrink n).
+        """
+        it = iter(batches)
+        try:
+            first = next(it)
+        except StopIteration:
+            raise ValueError("empty calibration stream") from None
+        acc = self.init_stats(params, first)
+        start = 0
+        if checkpointer is not None:
+            acc, start = checkpointer.restore(acc, self.fingerprint)
+        n_seen = 0
+        for i, batch in enumerate(itertools.chain([first], it)):
+            if i < start:
+                continue
+            if fail_hook is not None:
+                try:
+                    fail_hook(i)
+                except Exception:       # noqa: BLE001 — simulated host loss
+                    continue
+            acc = self._step(acc, params, batch)
+            n_seen += 1
+            if checkpointer is not None:
+                checkpointer.maybe_save(acc, i + 1, self.fingerprint)
+        if start == 0 and n_seen == 0:
+            raise ValueError("every calibration batch failed")
+        return jax.device_get(acc)
+
+
+def run_pass(model, units: List[Unit], params, batches: Iterable, *,
+             phase: int = 1, plan: Optional[Dict] = None,
+             checkpointer=None) -> Dict:
+    """One-call convenience wrapper: build an engine and run one pass."""
+    eng = CalibrationEngine(model, units, phase=phase, plan=plan)
+    return eng.run(params, batches, checkpointer=checkpointer)

@@ -5,12 +5,13 @@
 smaller standard model (reduced d_ff / per-head qk dims) built by the same
 model code — zero inference overhead (paper §1).
 
-The statistics steps are ordinary jitted functions of (params, batch); under
-pjit on a mesh they distribute exactly as described in DESIGN.md §2.1 (the
-per-batch reductions compile to psums over the data axes). The host loop
-only tree-adds tiny statistic pytrees and can checkpoint them between
-batches (fault tolerance for long calibration passes — see
-repro.distrib.fault).
+Statistics are gathered by the fused ``repro.core.calibrate
+.CalibrationEngine``: one jitted, donated-accumulator step per calibration
+batch reduces every unit's statistics from a single forward. Under pjit on
+a mesh the per-batch reductions compile to psums over the data axes
+(DESIGN.md §2.1), and the accumulator pytree can be checkpointed between
+batches (``ckpt_dir=`` — fault tolerance for long calibration passes, see
+repro.distrib.fault.CalibrationCheckpointer).
 """
 from __future__ import annotations
 
@@ -21,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import calibrate as calib_mod
 from repro.core import ranking as rank_mod
 from repro.core import solve as solve_mod
 from repro.core import stats as stats_mod
@@ -51,12 +53,24 @@ def _keep_count(full: int, sparsity: float, round_to: int) -> int:
 # ---------------------------------------------------------------------------
 
 def accumulate(step_fn: Callable, params, batches: Iterable) -> Dict:
+    """Legacy host-side accumulation loop (one jitted step, tree-add on the
+    host per batch). The pipeline itself uses CalibrationEngine's fused
+    donated-accumulator step; this stays as the reference implementation
+    for parity tests and the loop-vs-fused benchmark
+    (benchmarks/bench_calibration.py)."""
     total = None
     jit_step = jax.jit(step_fn)
     for batch in batches:
         total = stats_mod.tree_add(total, jit_step(params, batch))
     assert total is not None, "empty calibration stream"
     return jax.device_get(total)
+
+
+def _checkpointer(ckpt_dir: Optional[str], tag: str, every: int):
+    if ckpt_dir is None:
+        return None
+    from repro.distrib.fault import CalibrationCheckpointer
+    return CalibrationCheckpointer(f"{ckpt_dir}/{tag}", every=every)
 
 
 # ---------------------------------------------------------------------------
@@ -407,12 +421,16 @@ def _fold_attn_block(p, p2stats, unit: Unit, cfg, pc: PruneConfig, keep,
 
 def corp_prune(model, params, calib_batches: Callable[[], Iterable],
                pc: PruneConfig = PruneConfig(),
-               progress: Optional[Callable[[str], None]] = None):
+               progress: Optional[Callable[[str], None]] = None,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 8):
     """One-shot CORP (Alg. 1).
 
     calib_batches: zero-arg callable returning a fresh iterator of batches
     (the streaming pipeline is traversed twice: rank pass + attention
     compensation pass).
+    ckpt_dir: when set, each calibration pass checkpoints its statistics
+    accumulator every ``ckpt_every`` batches under ``<ckpt_dir>/passN`` and
+    resumes from the newest valid one (restartable long passes).
     """
     import copy
     import time
@@ -423,8 +441,10 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
 
     t0 = time.time()
     say("pass 1: ranking/MLP statistics")
-    step1 = stats_mod.make_stats_step(model, units, phase=1)
-    p1 = accumulate(step1, params, calib_batches())
+    engine1 = calib_mod.CalibrationEngine(model, units, phase=1)
+    p1 = engine1.run(params, calib_batches(),
+                     checkpointer=_checkpointer(ckpt_dir, "pass1",
+                                                ckpt_every))
     report["timing"]["pass1"] = time.time() - t0
 
     # --- ranking ----------------------------------------------------------
@@ -465,10 +485,11 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
     if attn_plan:
         t0 = time.time()
         say("pass 2: attention compensation statistics")
-        step2 = stats_mod.make_stats_step(model, units, phase=2,
-                                          plan={k: tuple(map(jnp.asarray, v))
-                                                for k, v in attn_plan.items()})
-        p2 = accumulate(step2, params, calib_batches())
+        engine2 = calib_mod.CalibrationEngine(model, units, phase=2,
+                                              plan=attn_plan)
+        p2 = engine2.run(params, calib_batches(),
+                         checkpointer=_checkpointer(ckpt_dir, "pass2",
+                                                    ckpt_every))
         report["timing"]["pass2"] = time.time() - t0
 
     # --- fold -------------------------------------------------------------
@@ -537,8 +558,8 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
     for gi, units in enumerate(groups):
         say(f"group {gi+1}/{len(groups)}: "
             + ", ".join(u.name for u in units))
-        step1 = stats_mod.make_stats_step(model, units, phase=1)
-        p1 = accumulate(step1, params, calib_batches())
+        p1 = calib_mod.CalibrationEngine(model, units, phase=1) \
+            .run(params, calib_batches())
         plan = {}
         for u in units:
             st = p1[u.name]
@@ -567,11 +588,9 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                      and u.name in plan}
         p2 = {}
         if attn_plan:
-            step2 = stats_mod.make_stats_step(
-                model, units, phase=2,
-                plan={k: tuple(map(jnp.asarray, v))
-                      for k, v in attn_plan.items()})
-            p2 = accumulate(step2, params, calib_batches())
+            p2 = calib_mod.CalibrationEngine(model, units, phase=2,
+                                             plan=attn_plan) \
+                .run(params, calib_batches())
         for u in units:
             if u.name not in plan:
                 continue

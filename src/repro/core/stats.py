@@ -19,6 +19,11 @@ Every statistic is a *linear* reduction over calibration samples, so under
 pjit the sums over the (data-sharded) batch axis compile to single psums —
 CORP distributes embarrassingly (DESIGN.md §2.1). Statistics accumulate in
 fp32 regardless of activation dtype (paper §Limitations).
+
+These are the reduction *definitions*; the streaming driver that fuses them
+into one donated-accumulator step per batch is
+``repro.core.calibrate.CalibrationEngine`` (``make_stats_step`` +
+``pruner.accumulate`` remain as the legacy/reference path).
 """
 from __future__ import annotations
 
@@ -29,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.units import Unit
+from repro.kernels.gram import ops as gram_ops
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -44,11 +50,17 @@ ACTIVE_EPS = 1e-2   # |x| > eps counts as 'active' (appendix E ranking)
 
 
 def _moments(x):
-    """x: (N, F) -> dict(n, s1, s2, na)."""
+    """x: (N, F) -> dict(n, s1, s2, na).
+
+    The (F, F) second moment + column sums go through the gram op, which
+    dispatches to the Pallas streaming kernel on TPU (zero-padded to the
+    block grid for arbitrary shapes) and the plain-jnp reference elsewhere.
+    """
     xf = x.astype(jnp.float32)
+    g = gram_ops.gram(xf)
     return {"n": jnp.asarray(xf.shape[0], jnp.float32),
-            "s1": jnp.sum(xf, axis=0),
-            "s2": xf.T @ xf,
+            "s1": g["s1"],
+            "s2": g["s2"],
             "na": jnp.sum((jnp.abs(xf) > ACTIVE_EPS).astype(jnp.float32),
                           axis=0)}
 

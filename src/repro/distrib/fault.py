@@ -15,6 +15,16 @@ training job:
    is unique to one-shot closed-form compression (an optimizer-based method
    would diverge); the paper's Table 3 shows accuracy is stable down to
    100 calibration samples, which bounds the damage of losing hosts.
+   (The fused ``repro.core.calibrate.CalibrationEngine`` exposes the same
+   behaviour through its ``fail_hook`` argument.)
+
+2b. resumable calibration — the engine's accumulator is a plain pytree of
+   linear sums, so any stream prefix is a valid checkpoint:
+   ``CalibrationCheckpointer`` persists it every N batches (atomically, via
+   repro.checkpoint) and restores the newest valid one together with the
+   batch cursor. Calibration batches are deterministic-by-index, so a
+   restarted pass skips the consumed prefix and lands on identical
+   statistics.
 
 3. elastic re-mesh — ``remesh`` rebuilds the device mesh from the live
    device set; all shardings are axis-name-based (repro.distrib.sharding)
@@ -30,11 +40,69 @@ import time
 from typing import Callable, Iterable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint
 
 log = logging.getLogger("repro.fault")
+
+
+class CalibrationCheckpointer:
+    """Periodic, atomic checkpoints of a calibration-statistics pytree.
+
+    Plugs into ``CalibrationEngine.run(..., checkpointer=...)``: the engine
+    calls ``restore`` once (returning the newest valid accumulator and the
+    number of batches it already covers) and ``maybe_save`` after every
+    batch. Saves reuse repro.checkpoint's tmp-dir-rename protocol, so a
+    host dying mid-save can never corrupt the newest checkpoint.
+    """
+
+    def __init__(self, ckpt_dir: str, every: int = 8):
+        assert every >= 1, "checkpoint interval must be >= 1 batch"
+        self.ckpt_dir = ckpt_dir
+        self.every = every
+
+    def restore(self, like, fingerprint: str = ""):
+        """-> (accumulator, n_batches_consumed); (like, 0) when fresh.
+
+        fingerprint: the engine's configuration hash (phase + unit set +
+        pass-2 plan). A checkpoint written under a different fingerprint —
+        a reused directory from another sparsity/plan/model run — is
+        ignored (fresh start) instead of silently resuming statistics that
+        do not belong to this pass. Note the calibration *stream* is not
+        fingerprinted: resuming assumes deterministic-by-index batches, as
+        everywhere else in this runtime.
+        """
+        import json
+        import os
+        last = latest_step(self.ckpt_dir)
+        if last is None:
+            return like, 0
+        # check identity from the manifest BEFORE unflattening — a foreign
+        # checkpoint may not even have this accumulator's tree structure
+        man = os.path.join(self.ckpt_dir, f"step_{last:08d}",
+                           "manifest.json")
+        saved_fp = json.load(open(man)).get("extra", {}) \
+            .get("fingerprint", "")
+        if fingerprint and saved_fp != fingerprint:
+            log.warning("calibration checkpoint in %s was written for a "
+                        "different configuration (fingerprint %r != %r); "
+                        "ignoring it and starting fresh", self.ckpt_dir,
+                        saved_fp, fingerprint)
+            return like, 0
+        acc, _extra = restore_checkpoint(self.ckpt_dir, last, like)
+        log.info("resumed calibration stats at batch %d", last)
+        # back onto device so the engine can donate the buffers
+        return jax.tree.map(jnp.asarray, acc), last
+
+    def maybe_save(self, acc, n_batches: int, fingerprint: str = "",
+                   force: bool = False):
+        if force or n_batches % self.every == 0:
+            from repro.checkpoint import save_checkpoint
+            save_checkpoint(self.ckpt_dir, n_batches, acc,
+                            extra={"n_batches": n_batches,
+                                   "fingerprint": fingerprint})
 
 
 def run_with_restarts(make_state, step_fn, *, ckpt_dir: str,

@@ -46,18 +46,31 @@ def _gram_kernel(xi_ref, xj_ref, s2_ref, s1_ref, acc_ref, col_ref, *, nn):
             s1_ref[...] = col_ref[...]
 
 
+def _round_up(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
 @functools.partial(jax.jit, static_argnames=("bf", "bn", "interpret"))
 def gram(x, *, bf=128, bn=512, interpret=False):
-    """x: (N, F) -> {'s2': (F,F) fp32, 's1': (1,F) fp32 column sums}."""
+    """x: (N, F) -> {'s2': (F,F) fp32, 's1': (F,) fp32 column sums}.
+
+    Arbitrary (N, F) are supported: inputs are zero-padded up to the block
+    grid (zero rows/columns contribute nothing to either linear reduction)
+    and the exact (F, F) / (F,) prefixes are sliced back out — so e.g.
+    DeiT's F=192 hidden or an N that isn't a multiple of the token block
+    never trips a divisibility assertion.
+    """
     N, F = x.shape
     bf = min(bf, F)
     bn = min(bn, N)
-    assert F % bf == 0 and N % bn == 0, "blocks must divide N/F"
-    nn = N // bn
+    Np, Fp = _round_up(N, bn), _round_up(F, bf)
+    if (Np, Fp) != (N, F):
+        x = jnp.pad(x, ((0, Np - N), (0, Fp - F)))
+    nn = Np // bn
     kernel = functools.partial(_gram_kernel, nn=nn)
     s2, s1 = pl.pallas_call(
         kernel,
-        grid=(F // bf, F // bf, nn),
+        grid=(Fp // bf, Fp // bf, nn),
         in_specs=[
             pl.BlockSpec((bn, bf), lambda i, j, n: (n, i)),
             pl.BlockSpec((bn, bf), lambda i, j, n: (n, j)),
@@ -67,8 +80,8 @@ def gram(x, *, bf=128, bn=512, interpret=False):
             pl.BlockSpec((1, bf), lambda i, j, n: (0, i)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((F, F), jnp.float32),
-            jax.ShapeDtypeStruct((1, F), jnp.float32),
+            jax.ShapeDtypeStruct((Fp, Fp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Fp), jnp.float32),
         ],
         scratch_shapes=[
             pltpu.VMEM((bf, bf), jnp.float32),
@@ -76,4 +89,4 @@ def gram(x, *, bf=128, bn=512, interpret=False):
         ],
         interpret=interpret,
     )(x, x)
-    return {"s2": s2, "s1": s1[0]}
+    return {"s2": s2[:F, :F], "s1": s1[0, :F]}

@@ -1,4 +1,16 @@
-"""Public gram op with backend dispatch (env ``REPRO_GRAM_IMPL`` overrides)."""
+"""Public gram op with backend dispatch (env ``REPRO_GRAM_IMPL`` overrides).
+
+Dispatch policy (the calibration hot path calls this for every second-moment
+reduction, see ``repro.core.stats._moments``):
+
+  * TPU backend  -> the Pallas streaming kernel; arbitrary (N, F) shapes are
+    handled by zero-padding inside ``gram.gram``.
+  * anything else (CPU/GPU) -> the pure-jnp reference — XLA's plain matmul
+    is the right lowering there, and it keeps interpret-mode Pallas off the
+    production path.
+  * ``REPRO_GRAM_IMPL`` in {"ref", "pallas", "interpret"} forces a backend
+    (interpret = Pallas interpreter, used by the CPU test suite).
+"""
 from __future__ import annotations
 
 import os
@@ -9,21 +21,16 @@ from repro.kernels.gram import ref as _ref
 from repro.kernels.gram.gram import gram as _pallas_gram
 
 
-def _resolve_impl(N: int, F: int) -> str:
+def _resolve_impl() -> str:
     impl = os.environ.get("REPRO_GRAM_IMPL", "")
     if impl:
         return impl
-    if jax.default_backend() == "tpu" and N % 512 == 0 and F % 128 == 0:
-        return "pallas"
-    return "ref"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def gram(x, impl=None):
-    """x: (N, F) -> {'s2': (F, F), 's1': (F,)} in fp32."""
-    N, F = x.shape
-    impl = impl or _resolve_impl(N, F)
+def gram(x, impl=None, *, bf=128, bn=512):
+    """x: (N, F) -> {'s2': (F, F), 's1': (F,)} in fp32. Any (N, F)."""
+    impl = impl or _resolve_impl()
     if impl == "ref":
         return _ref.gram(x)
-    bn = 512 if N % 512 == 0 else N
-    bf = 128 if F % 128 == 0 else F
     return _pallas_gram(x, bf=bf, bn=bn, interpret=(impl == "interpret"))

@@ -40,6 +40,12 @@ def main():
     ap.add_argument("--ckpt-in", default=None)
     ap.add_argument("--out", default=None)
     ap.add_argument("--mesh", default=None)
+    ap.add_argument("--calib-ckpt", default=None,
+                    help="directory for resumable calibration-statistics "
+                         "checkpoints (CalibrationEngine accumulator is "
+                         "saved every --calib-ckpt-every batches and the "
+                         "pass resumes from the newest valid one)")
+    ap.add_argument("--calib-ckpt-every", type=int, default=8)
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch)
@@ -69,13 +75,15 @@ def main():
     ctx = make_mesh(tuple(int(x) for x in args.mesh.split("x"))) \
         if args.mesh else None
     t0 = time.time()
+    kw = dict(progress=print, ckpt_dir=args.calib_ckpt,
+              ckpt_every=args.calib_ckpt_every)
     if ctx is not None:
         with ctx:
             new_params, new_cfg, report = corp_prune(model, params, stream,
-                                                     pc, progress=print)
+                                                     pc, **kw)
     else:
         new_params, new_cfg, report = corp_prune(model, params, stream, pc,
-                                                 progress=print)
+                                                 **kw)
     dt = time.time() - t0
     print(f"[prune] done in {dt:.1f}s; "
           f"d_ff {cfg.d_ff} -> {new_cfg.eff_d_ff}, "
@@ -87,8 +95,9 @@ def main():
                                "mlp_sparsity": pc.mlp_sparsity,
                                "attn_sparsity": pc.attn_sparsity})
         with open(f"{args.out}/report.json", "w") as f:
+            # stacked-layer units report per-layer diagnostic arrays
             json.dump(jax.tree.map(
-                lambda x: float(x) if hasattr(x, "item") else x,
+                lambda x: x.tolist() if hasattr(x, "tolist") else x,
                 report["units"]), f, indent=1, default=str)
         print(f"[prune] saved to {args.out}")
 

@@ -1,0 +1,239 @@
+"""CalibrationEngine: fused-vs-legacy parity, pipeline oracle, resumability.
+
+The engine must be a pure refactor of the statistics path: identical
+statistics to the legacy host-loop accumulate (same linear reductions, one
+fused forward instead of per-unit steps), an exact-identity pipeline at
+zero sparsity, and checkpoint/resume that reproduces an uninterrupted pass
+bit-for-bit (batches are deterministic-by-index).
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CalibrationEngine, PruneConfig, corp_prune,
+                        discover_units)
+from repro.core import stats as stats_mod
+from repro.core.pruner import accumulate
+from repro.core.ranking import rank_attn
+from repro.distrib.fault import CalibrationCheckpointer
+from repro.models import build_model
+
+from helpers import batch_for, calib_factory, out_of, tiny_cfg
+
+
+def _assert_tree_close(a, b, rtol=1e-5, atol=1e-5):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), rtol=rtol, atol=atol), a, b)
+
+
+# ---------------------------------------------------------------------------
+# engine vs legacy statistics parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deit-base", "granite-8b"])
+def test_engine_matches_legacy_pass1(arch):
+    cfg = tiny_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calib_factory(cfg, n=3)
+    units = discover_units(cfg)
+    fused = CalibrationEngine(model, units, phase=1).run(params, calib())
+    legacy = accumulate(stats_mod.make_stats_step(model, units, phase=1),
+                        params, calib())
+    _assert_tree_close(fused, legacy)
+
+
+@pytest.mark.parametrize("arch", ["deit-base", "granite-8b"])
+def test_engine_matches_legacy_pass2(arch):
+    """Pass 2 (attention ridge inputs, complex for rope archs) must agree
+    given the same keep/prune plan."""
+    cfg = tiny_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    calib = calib_factory(cfg, n=3)
+    units = discover_units(cfg)
+    p1 = CalibrationEngine(model, units, phase=1).run(params, calib())
+    plan = {}
+    for u in units:
+        if u.kind in ("attn", "mla", "cross"):
+            full = p1[u.name]["rank"].shape[-1]
+            plan[u.name] = rank_attn(p1[u.name], max(1, full // 2))
+    assert plan, arch
+    fused = CalibrationEngine(model, units, phase=2, plan=plan) \
+        .run(params, calib())
+    legacy = accumulate(
+        stats_mod.make_stats_step(
+            model, units, phase=2,
+            plan={k: tuple(map(jnp.asarray, v)) for k, v in plan.items()}),
+        params, calib())
+    _assert_tree_close(fused, legacy, rtol=1e-4, atol=1e-4)
+
+
+def test_engine_per_unit_partition_is_exact():
+    """Statistics are linear: gathering units one at a time (the per-unit
+    loop the engine replaces) must equal the single fused forward."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    calib = calib_factory(cfg, n=2)
+    units = discover_units(cfg)
+    fused = CalibrationEngine(model, units, phase=1).run(params, calib())
+    per_unit = {}
+    for u in units:
+        per_unit.update(
+            CalibrationEngine(model, [u], phase=1).run(params, calib()))
+    _assert_tree_close(fused, per_unit)
+
+
+# ---------------------------------------------------------------------------
+# pipeline oracle
+# ---------------------------------------------------------------------------
+
+def test_zero_sparsity_params_bitwise_identical():
+    """corp_prune at 0/0 sparsity must return numerically identical params
+    (no unit enters the plan, so weights pass through untouched) and report
+    zero distortion."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    new_p, new_c, report = corp_prune(model, params,
+                                      calib_factory(cfg, n=2),
+                                      PruneConfig(0.0, 0.0))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert new_c.d_ff_kept is None and new_c.qk_kept is None
+    # zero distortion: nothing was pruned, so no unit reports any
+    total = sum(float(np.sum(np.abs(np.asarray(d["j_star"]))))
+                for d in report["units"].values())
+    assert total == 0.0
+    y0 = out_of(model, params, batch_for(cfg))
+    y1 = out_of(build_model(new_c), new_p, batch_for(cfg))
+    np.testing.assert_array_equal(np.asarray(y0), np.asarray(y1))
+
+
+def test_prune_via_engine_runs_end_to_end():
+    """Smoke: the engine-backed corp_prune produces a working smaller model
+    with sane diagnostics (full-pipeline oracle on one family)."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    new_p, new_c, report = corp_prune(model, params, calib_factory(cfg),
+                                      PruneConfig(0.5, 0.5))
+    y = out_of(build_model(new_c), new_p, batch_for(cfg))
+    assert np.all(np.isfinite(np.asarray(y, np.float32)))
+    for name, d in report["units"].items():
+        assert np.all(np.asarray(d["j_star"]) <= np.asarray(d["j_uncomp"])
+                      * (1 + 1e-3) + 1e-6), name
+
+
+# ---------------------------------------------------------------------------
+# resumability / fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_reproduces_uninterrupted_pass(tmp_path):
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    calib = calib_factory(cfg, n=4)
+    units = discover_units(cfg)
+    eng = CalibrationEngine(model, units, phase=1)
+    ref = eng.run(params, calib())
+
+    ckdir = str(tmp_path / "calib")
+    # simulate a host dying after 2 of 4 batches (checkpoint every batch)
+    eng.run(params, itertools.islice(calib(), 2),
+            checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    # restart: the engine resumes at batch 2 and must land on identical sums
+    resumed = eng.run(params, calib(),
+                      checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    _assert_tree_close(resumed, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_corp_prune_with_ckpt_dir(tmp_path):
+    """End-to-end: ckpt_dir threads through both passes and a re-run picks
+    the checkpoints up (same pruned params either way)."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    calib = calib_factory(cfg, n=3)
+    pc = PruneConfig(0.5, 0.5)
+    p_ref, c_ref, _ = corp_prune(model, params, calib, pc)
+    ckdir = str(tmp_path / "prune")
+    p1, c1, _ = corp_prune(model, params, calib, pc, ckpt_dir=ckdir,
+                           ckpt_every=1)
+    p2, c2, _ = corp_prune(model, params, calib, pc, ckpt_dir=ckdir,
+                           ckpt_every=1)   # fully resumes from checkpoints
+    assert c_ref == c1 == c2
+    for a, b, c in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p1),
+                       jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b, np.float32),
+                                   np.asarray(c, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_fail_hook_drops_batches_gracefully():
+    """Bounded-staleness mode: a failing batch shrinks n but keeps the
+    estimator usable (fault.py mechanism 2 through the engine)."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    calib = calib_factory(cfg, n=4)
+    units = discover_units(cfg)
+    eng = CalibrationEngine(model, units, phase=1)
+
+    def hook(i):
+        if i == 1:
+            raise RuntimeError("simulated lost host")
+
+    full = eng.run(params, calib())
+    degraded = eng.run(params, calib(), fail_hook=hook)
+    mlp = [u.name for u in units if u.kind == "mlp"][0]
+    n_full = float(np.asarray(full[mlp]["n"]).ravel()[0])
+    n_deg = float(np.asarray(degraded[mlp]["n"]).ravel()[0])
+    assert n_deg == pytest.approx(n_full * 3 / 4)
+    # all batches failing is an error
+    with pytest.raises(ValueError):
+        eng.run(params, calib(),
+                fail_hook=lambda i: (_ for _ in ()).throw(RuntimeError()))
+
+
+def test_checkpoint_fingerprint_rejects_foreign_config(tmp_path):
+    """A reused --calib-ckpt dir from a different pass/plan must be ignored
+    (fresh start), never silently resumed into wrong statistics."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(8))
+    calib = calib_factory(cfg, n=3)
+    units = discover_units(cfg)
+    mlp_only = [u for u in units if u.kind == "mlp"]
+    ckdir = str(tmp_path / "reused")
+
+    eng_a = CalibrationEngine(model, mlp_only, phase=1)
+    eng_b = CalibrationEngine(model, units, phase=1)
+    assert eng_a.fingerprint != eng_b.fingerprint
+    eng_a.run(params, calib(),
+              checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    # same dir, different unit set: checkpoint has a foreign fingerprint
+    # (and a foreign tree) — must start fresh and still match a clean run
+    out = eng_b.run(params, calib(),
+                    checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    ref = eng_b.run(params, calib())
+    _assert_tree_close(out, ref, rtol=1e-6, atol=1e-6)
+
+    # pass-2 fingerprints must differ when only the plan differs
+    p1 = eng_b.run(params, calib())
+    attn = [u for u in units if u.kind == "attn"][0]
+    full = p1[attn.name]["rank"].shape[-1]
+    plan_a = {attn.name: rank_attn(p1[attn.name], max(1, full // 2))}
+    plan_b = {attn.name: rank_attn(p1[attn.name], max(1, full // 4))}
+    e2a = CalibrationEngine(model, units, phase=2, plan=plan_a)
+    e2b = CalibrationEngine(model, units, phase=2, plan=plan_b)
+    assert e2a.fingerprint != e2b.fingerprint

@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.core import solve as S
 
@@ -109,6 +109,52 @@ def test_gain_nonnegative_property(f, frac, seed, lowrank):
     gain = float(diag["gain"])
     assert gain >= -1e-3 * max(1.0, abs(float(diag["j_uncomp"])))
     assert float(diag["j_star"]) <= float(diag["j_uncomp"]) * (1 + 1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(f=st.integers(6, 20), frac=st.floats(0.25, 0.75),
+       seed=st.integers(0, 5000))
+def test_ridge_satisfies_normal_equations(f, frac, seed):
+    """(B, c) solve the ridge normal equations exactly:
+    B (Sigma_SS + lam I) = Sigma_PS  and  c = mu_P - B mu_S."""
+    rng = np.random.RandomState(seed)
+    keep_n = max(1, min(f - 1, int(f * frac)))
+    x = make_data(rng, 300, f)
+    keep = jnp.arange(keep_n)
+    prune = jnp.arange(keep_n, f)
+    mu, sigma = S.mlp_cov(moments(x))
+    lam = 1e-3 * float(jnp.mean(jnp.diag(sigma)))
+    sol = S.ridge_affine(mu, sigma, keep, prune, lam)
+    B = np.asarray(sol["B"], np.float64)
+    S_SS = np.asarray(sigma, np.float64)[:keep_n, :keep_n]
+    S_PS = np.asarray(sigma, np.float64)[keep_n:, :keep_n]
+    lhs = B @ (S_SS + lam * np.eye(keep_n))
+    scale = max(1.0, float(np.abs(S_PS).max()))
+    np.testing.assert_allclose(lhs, S_PS, rtol=2e-3, atol=2e-3 * scale)
+    c_expect = np.asarray(mu)[keep_n:] - B @ np.asarray(mu)[:keep_n]
+    np.testing.assert_allclose(np.asarray(sol["c"]), c_expect, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_large_lam_drives_B_to_zero_c_to_mean():
+    """lam -> inf kills the linear term: B -> 0 and c -> mu_P (the
+    compensator degenerates to mean imputation)."""
+    rng = np.random.RandomState(7)
+    f, keep_n = 16, 10
+    x = make_data(rng, 400, f, lowrank=8)
+    keep, prune = jnp.arange(keep_n), jnp.arange(keep_n, f)
+    mu, sigma = S.mlp_cov(moments(x))
+    sol = S.ridge_affine(mu, sigma, keep, prune, 1e9)
+    assert float(jnp.max(jnp.abs(sol["B"]))) < 1e-6
+    np.testing.assert_allclose(np.asarray(sol["c"]),
+                               np.asarray(mu)[keep_n:], rtol=1e-4,
+                               atol=1e-5)
+    # and the gain collapses accordingly: j_star ~ j_uncomp at B=0, c=mu_P
+    # is NOT guaranteed (mean subtraction still helps), but gain >= 0 must
+    # survive even in the degenerate limit
+    w = rng.randn(f - keep_n, 3).astype(np.float32)
+    diag = S.mlp_distortion(sol, jnp.asarray(w))
+    assert float(diag["gain"]) >= -1e-3
 
 
 def test_lossfree_when_linearly_dependent():

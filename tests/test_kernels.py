@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.kernels.flash_attention import ops as fops, ref as fref
 from repro.kernels.gram import ops as gops, ref as gref
@@ -92,6 +92,36 @@ def test_gram_vs_ref(n, f, dtype):
                                rtol=tol, atol=tol)
     np.testing.assert_allclose(np.asarray(a["s1"]), np.asarray(b["s1"]),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,f,bf,bn", [
+    (300, 100, 32, 128),      # neither dim divisible -> both axes padded
+    (100, 300, 128, 64),      # token dim padded, feature dim padded
+    (257, 129, 128, 512),     # bn clamps to N, F one over the block
+    (500, 64, 32, 256),       # only token-dim padding
+])
+def test_gram_padding_non_divisible(n, f, bf, bn):
+    """Zero-padding lifts the old F%bf==0 / N%bn==0 assertion: arbitrary
+    DeiT/LM shapes must match the reference exactly (zero rows/cols are
+    invisible to both linear reductions)."""
+    x = jax.random.normal(jax.random.PRNGKey(42), (n, f))
+    a = gops.gram(x, impl="interpret", bf=bf, bn=bn)
+    b = gref.gram(x)
+    assert a["s2"].shape == (f, f) and a["s1"].shape == (f,)
+    np.testing.assert_allclose(np.asarray(a["s2"]), np.asarray(b["s2"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a["s1"]), np.asarray(b["s1"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gram_ops_default_dispatch_cpu():
+    """On CPU the resolver picks the jnp reference (Pallas stays off the
+    production path) and odd shapes go through without assertion."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (37, 23))
+    out = gops.gram(x)
+    ref = gref.gram(x)
+    np.testing.assert_allclose(np.asarray(out["s2"]), np.asarray(ref["s2"]),
+                               rtol=1e-5, atol=1e-5)
 
 
 @settings(max_examples=10, deadline=None)
