@@ -422,15 +422,32 @@ def _fold_attn_block(p, p2stats, unit: Unit, cfg, pc: PruneConfig, keep,
 def corp_prune(model, params, calib_batches: Callable[[], Iterable],
                pc: PruneConfig = PruneConfig(),
                progress: Optional[Callable[[str], None]] = None,
-               ckpt_dir: Optional[str] = None, ckpt_every: int = 8):
-    """One-shot CORP (Alg. 1).
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 8,
+               mesh=None):
+    """One-shot CORP (Alg. 1): calibrate -> rank -> compensate -> fold.
 
-    calib_batches: zero-arg callable returning a fresh iterator of batches
-    (the streaming pipeline is traversed twice: rank pass + attention
-    compensation pass).
-    ckpt_dir: when set, each calibration pass checkpoints its statistics
-    accumulator every ``ckpt_every`` batches under ``<ckpt_dir>/passN`` and
-    resumes from the newest valid one (restartable long passes).
+    Args:
+      model: model exposing ``apply(params, batch, taps=...)`` and ``cfg``.
+      params: dense parameter pytree (any dtype; statistics are fp32).
+      calib_batches: zero-arg callable returning a fresh iterator of
+        batches (the streaming pipeline is traversed twice: rank pass +
+        attention compensation pass).
+      pc: sparsities/ridge/ranking-policy knobs, see ``PruneConfig``.
+      progress: optional ``fn(str)`` called at each pipeline stage.
+      ckpt_dir: when set, each calibration pass checkpoints its statistics
+        accumulator every ``ckpt_every`` batches under ``<ckpt_dir>/passN``
+        and resumes from the newest valid one (restartable long passes).
+      mesh: optional ``jax.sharding.Mesh`` — both calibration passes then
+        run mesh-sharded (``CalibrationEngine(mesh=...)``): per-unit
+        covariance/Gram blocks column-sharded over the model axis, batch
+        contributions psum-reduced, no replicated full Sigma on any device.
+        Ranking and folding still happen on host from the gathered sums.
+
+    Returns:
+      ``(pruned_params, pruned_config, report)`` — a physically smaller
+      standard model (reduced d_ff / per-head qk dims) built by the same
+      model code, its config, and per-unit distortion diagnostics + stage
+      timings.
     """
     import copy
     import time
@@ -441,7 +458,7 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
 
     t0 = time.time()
     say("pass 1: ranking/MLP statistics")
-    engine1 = calib_mod.CalibrationEngine(model, units, phase=1)
+    engine1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh)
     p1 = engine1.run(params, calib_batches(),
                      checkpointer=_checkpointer(ckpt_dir, "pass1",
                                                 ckpt_every))
@@ -486,7 +503,7 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
         t0 = time.time()
         say("pass 2: attention compensation statistics")
         engine2 = calib_mod.CalibrationEngine(model, units, phase=2,
-                                              plan=attn_plan)
+                                              plan=attn_plan, mesh=mesh)
         p2 = engine2.run(params, calib_batches(),
                          checkpointer=_checkpointer(ckpt_dir, "pass2",
                                                     ckpt_every))
@@ -533,7 +550,8 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
 def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                         pc: PruneConfig = PruneConfig(), *,
                         unit_group_size: int = 2,
-                        progress: Optional[Callable[[str], None]] = None):
+                        progress: Optional[Callable[[str], None]] = None,
+                        mesh=None):
     """Memory-bounded CORP: identical output to ``corp_prune`` (statistics
     are linear, so partitioning the unit set changes nothing), but only
     ``unit_group_size`` units' statistics are resident at a time.
@@ -544,6 +562,18 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
     calibration set per group and bounds resident statistics to one group,
     which is how a pruning pass over thousands of layers stays inside host
     memory and can checkpoint between groups (DESIGN.md §2.3).
+
+    Args:
+      unit_group_size: units whose statistics are resident concurrently.
+      mesh: optional ``jax.sharding.Mesh`` — composes both bounds: the
+        active group's statistics are the only ones resident AND they are
+        model-sharded across the mesh (``CalibrationEngine(mesh=...)``),
+        so per-device residency is group_size x Sigma/m. This is the
+        671B-scale configuration from ROADMAP's "Sharded engine" item.
+
+    Returns:
+      ``(pruned_params, pruned_config, report)`` as ``corp_prune``, with
+      ``report['groups']`` counting processed unit groups.
     """
     import copy
     cfg = model.cfg
@@ -558,7 +588,7 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
     for gi, units in enumerate(groups):
         say(f"group {gi+1}/{len(groups)}: "
             + ", ".join(u.name for u in units))
-        p1 = calib_mod.CalibrationEngine(model, units, phase=1) \
+        p1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh) \
             .run(params, calib_batches())
         plan = {}
         for u in units:
@@ -589,7 +619,7 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
         p2 = {}
         if attn_plan:
             p2 = calib_mod.CalibrationEngine(model, units, phase=2,
-                                             plan=attn_plan) \
+                                             plan=attn_plan, mesh=mesh) \
                 .run(params, calib_batches())
         for u in units:
             if u.name not in plan:

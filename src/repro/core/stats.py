@@ -28,13 +28,17 @@ into one donated-accumulator step per batch is
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.units import Unit
 from repro.kernels.gram import ops as gram_ops
+
+log = logging.getLogger("repro.stats")
 
 # ---------------------------------------------------------------------------
 # helpers
@@ -63,6 +67,56 @@ def _moments(x):
             "s2": g["s2"],
             "na": jnp.sum((jnp.abs(xf) > ACTIVE_EPS).astype(jnp.float32),
                           axis=0)}
+
+
+def _sharded_moments(x, shard):
+    """Model-sharded ``_moments``: x (..., N, F) -> same stat dict, with
+    s1/s2/na column-sharded over ``shard.model_axis``.
+
+    The second moment routes through ``gram_ops.gram_sharded`` (shard_map:
+    each device runs the gram kernel on its local (N_local, F/m) column
+    tile and psum-reduces over the batch axes), so no device materialises a
+    full (F, F) Sigma. A token count that doesn't divide the data axes is
+    zero-row-padded (invisible to every linear reduction; ``n`` keeps the
+    true count). Only an F that doesn't divide the model axis falls back to
+    the replicated path — returned as None and WARNED, because that unit
+    then costs a full per-device Sigma.
+    """
+    sizes = shard.sizes
+    m = shard.model_size
+    baxes = shard.present_batch_axes
+    d = int(np.prod([sizes[a] for a in baxes])) if baxes else 1
+    N, F = x.shape[-2], x.shape[-1]
+    if m <= 1 or F % m:
+        if m > 1:
+            log.warning(
+                "sharded calibration: unit width F=%d does not divide the "
+                "%r axis (%d-way) — this unit's Sigma stays REPLICATED "
+                "(F*F fp32 per device)", F, shard.model_axis, m)
+        return None
+    if N % d:
+        pad = d - N % d
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
+    g = gram_ops.gram_sharded(x, shard.mesh, model_axis=shard.model_axis,
+                              batch_axes=baxes)
+    xf = x.astype(jnp.float32)
+    na = jnp.sum((jnp.abs(xf) > ACTIVE_EPS).astype(jnp.float32), axis=-2)
+    lead = x.shape[:-2]
+    n = jnp.full(lead, float(N), jnp.float32) if lead \
+        else jnp.asarray(float(N), jnp.float32)
+    return {"n": n, "s1": g["s1"], "s2": g["s2"], "na": na}
+
+
+def _unit_moments(h, stacked: bool, shard=None):
+    """Dense-unit moments for a tap h (..., B, T, F) [+reps when stacked]."""
+    if shard is not None:
+        flat = h.reshape((h.shape[0], -1, h.shape[-1])) if stacked \
+            else h.reshape(-1, h.shape[-1])
+        out = _sharded_moments(flat, shard)
+        if out is not None:
+            return out
+    fn = lambda a: _moments(_flat_tokens(a))
+    return jax.vmap(fn)(h) if stacked else fn(h)
 
 
 def _masked_moments(h, mask):
@@ -205,14 +259,30 @@ def _p2_attn(taps, unit: Unit, keep, prune):
 # public: jit-able per-batch statistics steps
 # ---------------------------------------------------------------------------
 
-def pass1_reduce(taps: Dict, units: List[Unit], cfg) -> Dict:
+def pass1_reduce(taps: Dict, units: List[Unit], cfg, shard=None) -> Dict:
+    """Per-batch pass-1 statistic sums for every unit, from one forward's
+    taps.
+
+    Args:
+      taps: activation taps collected by ``model.apply(..., taps=taps)``.
+      units: units to reduce (see ``repro.core.units``).
+      cfg: model config (attention grouping metadata).
+      shard: optional ``repro.distrib.sharding.CalibSharding`` — dense-unit
+        second moments then route through the per-shard gram path
+        (``_sharded_moments``); units whose shapes don't divide the mesh
+        fall back to the replicated reduction (the pjit out-shardings still
+        apply).
+
+    Returns:
+      ``{unit.name: stat dict}`` — mlp/moe/mamba: {n, s1, s2, na};
+      attention: {rank: (G, d), n}.
+    """
     out = {}
     for u in units:
         if u.kind in ("mlp", "rwkv_mlp", "mamba"):
             key = {"mlp": "h", "rwkv_mlp": "h", "mamba": "mamba_y"}[u.kind]
-            h = taps[f"{u.tap_prefix}/{key}"]
-            fn = lambda a: _moments(_flat_tokens(a))
-            out[u.name] = jax.vmap(fn)(h) if u.stacked else fn(h)
+            out[u.name] = _unit_moments(taps[f"{u.tap_prefix}/{key}"],
+                                        u.stacked, shard)
         elif u.kind == "moe":
             out[u.name] = _p1_moe(taps, u)
         elif u.kind in ("attn", "mla", "cross"):

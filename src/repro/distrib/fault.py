@@ -56,6 +56,20 @@ class CalibrationCheckpointer:
     number of batches it already covers) and ``maybe_save`` after every
     batch. Saves reuse repro.checkpoint's tmp-dir-rename protocol, so a
     host dying mid-save can never corrupt the newest checkpoint.
+
+    Sharded accumulators (the engine's ``mesh=`` mode) are **gathered on
+    save**: ``save_checkpoint`` device_gets the pytree, which assembles
+    each model-sharded Sigma into one host array on disk. Trade-off: the
+    on-disk format stays mesh-independent and single-file-simple, at the
+    cost of one host-side full-Sigma materialisation per save (bounded: one
+    statistic tree, not one per unit group) — per-shard saves would avoid
+    that peak but tie the checkpoint to the exact device layout. Restore
+    re-places the gathered arrays shard-by-shard via the engine's
+    ``stat_shardings``, so the resumed donated step starts from a correctly
+    sharded accumulator. Despite the mesh-independent format, the engine's
+    fingerprint *includes* the mesh layout: a checkpoint written under a
+    different mesh is rejected (fresh start) because shard-local
+    accumulation order differs and bitwise resume could not be guaranteed.
     """
 
     def __init__(self, ckpt_dir: str, every: int = 8):
@@ -63,16 +77,22 @@ class CalibrationCheckpointer:
         self.ckpt_dir = ckpt_dir
         self.every = every
 
-    def restore(self, like, fingerprint: str = ""):
+    def restore(self, like, fingerprint: str = "", shardings=None):
         """-> (accumulator, n_batches_consumed); (like, 0) when fresh.
 
         fingerprint: the engine's configuration hash (phase + unit set +
-        pass-2 plan). A checkpoint written under a different fingerprint —
-        a reused directory from another sparsity/plan/model run — is
+        pass-2 plan + mesh layout when sharded). A checkpoint written under
+        a different fingerprint — a reused directory from another
+        sparsity/plan/model run, or the same pass on a different mesh — is
         ignored (fresh start) instead of silently resuming statistics that
         do not belong to this pass. Note the calibration *stream* is not
         fingerprinted: resuming assumes deterministic-by-index batches, as
         everywhere else in this runtime.
+
+        shardings: optional NamedSharding pytree matching ``like`` (the
+        engine's ``stat_shardings``); restored arrays are device_put with
+        it so a sharded pass resumes with a correctly placed, donatable
+        accumulator.
         """
         import json
         import os
@@ -94,6 +114,8 @@ class CalibrationCheckpointer:
         acc, _extra = restore_checkpoint(self.ckpt_dir, last, like)
         log.info("resumed calibration stats at batch %d", last)
         # back onto device so the engine can donate the buffers
+        if shardings is not None:
+            return jax.device_put(acc, shardings), last
         return jax.tree.map(jnp.asarray, acc), last
 
     def maybe_save(self, acc, n_batches: int, fingerprint: str = "",

@@ -15,11 +15,18 @@ re-lowers without code changes.
 ``constrain(x, kind)`` applies a with_sharding_constraint according to the
 active activation policy (a context variable set by the launchers) and is a
 no-op outside any policy — model code stays mesh-agnostic.
+
+Calibration statistics get their own sharding contract (``stats_specs`` +
+``CalibSharding``): per-unit second-moment/Gram blocks are column-sharded
+over the model axis so a calibration pass never materialises a replicated
+full Sigma on any device (see docs/calibration.md and
+``repro.core.calibrate.CalibrationEngine``).
 """
 from __future__ import annotations
 
 import contextlib
 import threading
+from typing import NamedTuple, Tuple
 
 import jax
 import numpy as np
@@ -71,6 +78,18 @@ def _spec_fits(x, spec) -> bool:
 
 
 def constrain(x, kind: str):
+    """Apply the active activation policy's sharding constraint to ``x``.
+
+    Args:
+      x: activation array (any rank).
+      kind: rule key — 'residual', 'logits', 'mamba_inner', 'attn_qkv'
+        (see ``make_activation_rules``).
+
+    Returns ``x`` unchanged outside any policy, when the policy has no rule
+    for ``kind``, or when the spec doesn't divide ``x``'s shape on the
+    active mesh (never pads); otherwise ``with_sharding_constraint(x,
+    spec)``. Model code calls this unconditionally and stays mesh-agnostic.
+    """
     rules = getattr(_STATE, "rules", None)
     if not rules:
         return x
@@ -97,6 +116,18 @@ def constrain_qkv(q, k, v):
 
 def make_activation_rules(batch_axes=("data",), model_axis="model",
                           seq_shard=True):
+    """Standard activation-sharding rule set for ``activation_policy``.
+
+    Args:
+      batch_axes: mesh axes the batch dim shards over (tuple).
+      model_axis: tensor-parallel axis name.
+      seq_shard: sequence-parallel residual (Megatron-SP) when True.
+
+    Returns ``{kind: PartitionSpec}`` for 'residual' (B, T, D),
+    'logits' (B, T, V), 'mamba_inner' (B, T, d_inner) and
+    'attn_qkv' (B, T, H, d) — the keys ``constrain``/``constrain_qkv``
+    look up.
+    """
     resid = P(batch_axes, model_axis if seq_shard else None, None)
     return {
         "residual": resid,
@@ -185,7 +216,20 @@ def _spec_for(path: str, shape, model_size: int, fsdp_axes, fsdp_size: int,
 
 
 def param_specs(params, mesh: Mesh, *, fsdp: bool = False):
-    """PartitionSpec pytree matching ``params`` (works on eval_shape trees)."""
+    """PartitionSpec pytree matching ``params``.
+
+    Args:
+      params: parameter pytree (real arrays or ``jax.eval_shape`` output —
+        only ``.shape`` is inspected, so abstract trees work).
+      mesh: target mesh; axis sizes gate divisibility (a dim that doesn't
+        divide the 'model' axis is left unsharded rather than padded).
+      fsdp: additionally shard one remaining dim of every >=2-D param over
+        ('pod','data') — ZeRO-3 style parameter sharding.
+
+    Returns:
+      A pytree of ``PartitionSpec`` with the same structure as ``params``;
+      feed it to ``shardings_of`` for ``NamedSharding`` leaves.
+    """
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
     model_size = sizes.get("model", 1)
     fsdp_axes = tuple(a for a in ("pod", "data") if a in sizes) if fsdp else ()
@@ -206,12 +250,19 @@ def param_specs(params, mesh: Mesh, *, fsdp: bool = False):
 
 
 def shardings_of(specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree on ``mesh`` (specs are
+    treated as leaves, so nested dict/list structures pass through)."""
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda s: isinstance(s, P))
 
 
 def batch_specs(batch_tree, mesh: Mesh):
-    """Shard every batch array's leading dim over ('pod','data')."""
+    """Shard every batch array's leading (batch) dim over ('pod','data').
+
+    Arrays whose leading dim doesn't divide the data-parallel world size are
+    left replicated (never padded). Returns a PartitionSpec pytree matching
+    ``batch_tree``.
+    """
     axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     def f(x):
         spec = [None] * x.ndim
@@ -221,3 +272,90 @@ def batch_specs(batch_tree, mesh: Mesh):
             spec[0] = axes if len(axes) > 1 else axes[0]
         return P(*spec)
     return jax.tree.map(f, batch_tree)
+
+
+# ---------------------------------------------------------------------------
+# calibration-statistics sharding
+# ---------------------------------------------------------------------------
+
+class CalibSharding(NamedTuple):
+    """How a calibration pass is laid out on a mesh.
+
+    mesh: the device mesh the fused statistics step runs under.
+    model_axis: mesh axis partitioning per-unit covariance/Gram columns.
+    batch_axes: mesh axes the calibration batch is sharded over; per-batch
+      partial sums reduce over these via psum inside the compiled step.
+    """
+    mesh: Mesh
+    model_axis: str = "model"
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+
+    @property
+    def sizes(self):
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    @property
+    def model_size(self) -> int:
+        return self.sizes.get(self.model_axis, 1)
+
+    @property
+    def present_batch_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a in self.batch_axes if a in self.sizes)
+
+
+# Stat leaves that stay replicated: scalar-ish bookkeeping whose size never
+# grows with the unit width (sample counts, pruned-tail energies).
+_REPLICATED_STATS = frozenset({"n", "t2"})
+
+
+def stats_specs(stats, mesh, *, model_axis: str = "model"):
+    """PartitionSpecs for a calibration-statistics pytree.
+
+    Every per-unit statistic leaf whose trailing dim divides the model-axis
+    size is sharded on that trailing dim over ``model_axis`` — for a second
+    moment ``s2: (F, F)`` that is column sharding, so each device holds an
+    (F, F/m) slab and no device ever allocates a replicated full Sigma.
+    Sample counts ``n`` and pruned-tail energies ``t2`` stay replicated
+    (they are O(1) per unit). Leading stack/expert/group dims are never
+    sharded.
+
+    Args:
+      stats: statistics pytree (arrays or ``jax.eval_shape`` structs; only
+        ``.shape``/``.ndim`` are inspected). Leaf *names* (the innermost
+        dict key: 's2', 's1', 'na', 'rank', 'G', 'h', 'n', 't2') choose the
+        rule.
+      mesh: a ``jax.sharding.Mesh`` — or a plain ``{axis: size}`` dict,
+        which makes the rule testable without devices.
+      model_axis: mesh axis name to shard over.
+
+    Returns:
+      PartitionSpec pytree matching ``stats``.
+
+    >>> tree = {"blk/mlp": {"s2": np.zeros((3, 8, 8)), "s1": np.zeros((3, 8)),
+    ...                     "n": np.zeros((3,))}}
+    >>> specs = stats_specs(tree, {"data": 2, "model": 4})
+    >>> specs["blk/mlp"]["s2"] == P(None, None, "model")
+    True
+    >>> specs["blk/mlp"]["s1"] == P(None, "model")
+    True
+    >>> specs["blk/mlp"]["n"] == P()     # counts stay replicated
+    True
+    >>> stats_specs(tree, {"data": 2, "model": 3})["blk/mlp"]["s2"] == P()
+    True
+    """
+    sizes = mesh if isinstance(mesh, dict) else \
+        dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get(model_axis, 1)
+
+    flat = jax.tree_util.tree_flatten_with_path(stats)[0]
+    treedef = jax.tree_util.tree_structure(stats)
+    specs = []
+    for kp, leaf in flat:
+        name = str(getattr(kp[-1], "key", getattr(kp[-1], "idx", kp[-1])))
+        if (m <= 1 or leaf.ndim == 0 or name in _REPLICATED_STATS
+                or leaf.shape[-1] % m or leaf.shape[-1] < m):
+            specs.append(P())
+        else:
+            specs.append(P(*([None] * (leaf.ndim - 1)), model_axis))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+

@@ -46,6 +46,36 @@ def _gram_kernel(xi_ref, xj_ref, s2_ref, s1_ref, acc_ref, col_ref, *, nn):
             s1_ref[...] = col_ref[...]
 
 
+def _gram_cross_kernel(xi_ref, xj_ref, s2_ref, s1_ref, acc_ref, col_ref, *,
+                       nn):
+    """Rectangular variant: X^T Y with column sums of Y (the per-shard gram
+    of a model-sharded calibration pass — Y is the local column block)."""
+    n = pl.program_id(2)
+    i = pl.program_id(0)
+
+    @pl.when(n == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        col_ref[...] = jnp.zeros_like(col_ref)
+
+    xi = xi_ref[...].astype(jnp.float32)    # (bn, bfx)
+    xj = xj_ref[...].astype(jnp.float32)    # (bn, bfy)
+    acc_ref[...] += jax.lax.dot_general(
+        xi, xj, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(i == 0)
+    def _colsum():
+        col_ref[...] += jnp.sum(xj, axis=0, keepdims=True)
+
+    @pl.when(n == nn - 1)
+    def _finalize():
+        s2_ref[...] = acc_ref[...]
+
+        @pl.when(i == 0)
+        def _w():
+            s1_ref[...] = col_ref[...]
+
+
 def _round_up(n: int, b: int) -> int:
     return -(-n // b) * b
 
@@ -90,3 +120,51 @@ def gram(x, *, bf=128, bn=512, interpret=False):
         interpret=interpret,
     )(x, x)
     return {"s2": s2[:F, :F], "s1": s1[0, :F]}
+
+
+@functools.partial(jax.jit, static_argnames=("bf", "bn", "interpret"))
+def gram_cross(x, y, *, bf=128, bn=512, interpret=False):
+    """x: (N, Fx), y: (N, Fy) -> {'s2': (Fx, Fy) fp32 X^T Y, 's1': (Fy,)}.
+
+    The sharded-calibration building block: each model shard owns a column
+    block Y of the activation matrix and computes its (Fx, Fy) slab of the
+    full gram plus Y's column sums. Zero-padding is applied independently to
+    X and Y's local shapes — a shard never pads (or even sees) another
+    shard's columns, which is what keeps per-shard VMEM traffic at
+    ``Fx*Fy/m`` instead of ``Fx^2``.
+    """
+    N, Fx = x.shape
+    Ny, Fy = y.shape
+    assert N == Ny, (N, Ny)
+    bfx, bfy = min(bf, Fx), min(bf, Fy)
+    bn = min(bn, N)
+    Np = _round_up(N, bn)
+    Fxp, Fyp = _round_up(Fx, bfx), _round_up(Fy, bfy)
+    if (Np, Fxp) != (N, Fx):
+        x = jnp.pad(x, ((0, Np - N), (0, Fxp - Fx)))
+    if (Np, Fyp) != (N, Fy):
+        y = jnp.pad(y, ((0, Np - N), (0, Fyp - Fy)))
+    nn = Np // bn
+    kernel = functools.partial(_gram_cross_kernel, nn=nn)
+    s2, s1 = pl.pallas_call(
+        kernel,
+        grid=(Fxp // bfx, Fyp // bfy, nn),
+        in_specs=[
+            pl.BlockSpec((bn, bfx), lambda i, j, n: (n, i)),
+            pl.BlockSpec((bn, bfy), lambda i, j, n: (n, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bfx, bfy), lambda i, j, n: (i, j)),
+            pl.BlockSpec((1, bfy), lambda i, j, n: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Fxp, Fyp), jnp.float32),
+            jax.ShapeDtypeStruct((1, Fyp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bfx, bfy), jnp.float32),
+            pltpu.VMEM((1, bfy), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, y)
+    return {"s2": s2[:Fx, :Fy], "s1": s1[0, :Fy]}

@@ -8,3 +8,12 @@ def gram(x):
     """x: (N, F) -> {'s2': (F, F) fp32 X^T X, 's1': (F,) column sums}."""
     xf = x.astype(jnp.float32)
     return {"s2": xf.T @ xf, "s1": jnp.sum(xf, axis=0)}
+
+
+def gram_cross(x, y):
+    """x: (N, Fx), y: (N, Fy) -> {'s2': (Fx, Fy) fp32 X^T Y, 's1': (Fy,)
+    column sums of Y}. The rectangular gram a model-sharded calibration pass
+    computes per shard: Y is the shard's local column block of X."""
+    xf = x.astype(jnp.float32)
+    yf = y.astype(jnp.float32)
+    return {"s2": xf.T @ yf, "s1": jnp.sum(yf, axis=0)}

@@ -2,21 +2,60 @@
 
 ``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
 importing this module never touches jax device state — the dry-run entry
-point must set XLA_FLAGS before any jax initialization.
+point must set XLA_FLAGS before any jax initialization. The same constraint
+is why ``force_host_devices`` exists: simulated multi-device runs (tests,
+docs examples, the sharded-calibration benchmark) must set
+``--xla_force_host_platform_device_count`` before the first jax import in
+the process.
 """
 from __future__ import annotations
 
-import jax
+import os
+
+
+def force_host_devices(n: int):
+    """Simulate ``n`` devices on the host CPU platform.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``.
+    Must run BEFORE jax initializes its backends (i.e. before the first
+    ``import jax`` in the process, or at least before any jax API touches
+    devices) — raises if jax is already initialized. This is how the
+    sharded-calibration tests and ``benchmarks/bench_calib_sharded.py``
+    build a >=4-device mesh on a laptop.
+    """
+    import sys
+    jx = sys.modules.get("jax")
+    try:
+        initialized = bool(jx._src.xla_bridge._backends)  # type: ignore
+    except AttributeError:
+        initialized = False
+    if initialized:
+        raise RuntimeError(
+            "force_host_devices must be called before jax initializes "
+            "its backends; set XLA_FLAGS in the environment instead")
+    flag = f"--xla_force_host_platform_device_count={n}"
+    prev = os.environ.get("XLA_FLAGS", "")
+    if flag not in prev:
+        os.environ["XLA_FLAGS"] = (prev + " " + flag).strip()
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The fleet meshes: (data=16, model=16) per pod, x2 pods multi-pod."""
+    import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes=None):
-    """Arbitrary mesh for tests/examples (e.g. (2,4) on 8 host devices)."""
+    """Arbitrary mesh for tests/examples (e.g. (2,4) on 8 host devices).
+
+    Args:
+      shape: device-grid shape, e.g. ``(2, 4)`` = 2-way data x 4-way model.
+      axes: axis names; defaults to the trailing names of
+        ('pod', 'data', 'model') matching ``len(shape)``.
+    """
+    import jax
     if axes is None:
         axes = ("data", "model")[-len(shape):] if len(shape) <= 2 \
             else ("pod", "data", "model")

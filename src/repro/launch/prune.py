@@ -5,8 +5,12 @@
 
 Loads (or initializes) dense params, runs the one-shot CORP pipeline over a
 calibration stream, saves the pruned checkpoint + report. With --mesh the
-statistics passes run under pjit on the production mesh (the reductions
-compile to psums over the data axes).
+statistics passes run under a device mesh; adding --calib-sharded threads
+the mesh into the CalibrationEngine as an explicit sharding contract:
+per-unit covariance/Gram blocks column-sharded over the model axis, batch
+contributions psum-reduced, no replicated full Sigma on any device.
+
+Every flag is documented in docs/cli.md with a worked end-to-end example.
 """
 from __future__ import annotations
 
@@ -25,28 +29,66 @@ from repro.models import build_model
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--sparsity", type=float, default=0.5)
-    ap.add_argument("--mlp-sparsity", type=float, default=None)
-    ap.add_argument("--attn-sparsity", type=float, default=None)
-    ap.add_argument("--calib", type=int, default=128)
-    ap.add_argument("--calib-batch", type=int, default=8)
-    ap.add_argument("--calib-seq", type=int, default=64)
-    ap.add_argument("--rank-policy", default="combined")
-    ap.add_argument("--no-compensate", action="store_true")
-    ap.add_argument("--round-to", type=int, default=1)
-    ap.add_argument("--lam", type=float, default=1e-4)
-    ap.add_argument("--ckpt-in", default=None)
-    ap.add_argument("--out", default=None)
-    ap.add_argument("--mesh", default=None)
+    ap = argparse.ArgumentParser(
+        description="One-shot CORP pruning over a calibration stream "
+                    "(see docs/cli.md for a worked example)")
+    ap.add_argument("--arch", required=True,
+                    help="model config name (repro.configs registry), e.g. "
+                         "deit-base, granite-8b; '-reduced' suffix shrinks "
+                         "it for smoke runs")
+    ap.add_argument("--sparsity", type=float, default=0.5,
+                    help="fraction of structures to REMOVE from both MLP "
+                         "hidden dims and attention qk dims (per-kind "
+                         "overrides below win)")
+    ap.add_argument("--mlp-sparsity", type=float, default=None,
+                    help="override --sparsity for MLP/MoE/mamba hidden "
+                         "channels (0 disables MLP pruning)")
+    ap.add_argument("--attn-sparsity", type=float, default=None,
+                    help="override --sparsity for attention qk dims/rotary "
+                         "pairs (0 disables attention pruning)")
+    ap.add_argument("--calib", type=int, default=128,
+                    help="number of calibration samples (unlabeled)")
+    ap.add_argument("--calib-batch", type=int, default=8,
+                    help="calibration batch size")
+    ap.add_argument("--calib-seq", type=int, default=64,
+                    help="calibration sequence length (LM archs only)")
+    ap.add_argument("--rank-policy", default="combined",
+                    help="MLP ranking statistic: act | mag | combined | "
+                         "active (repro.core.ranking.mlp_scores)")
+    ap.add_argument("--no-compensate", action="store_true",
+                    help="rank-only baseline: prune without the closed-form "
+                         "ridge compensation (paper ablation)")
+    ap.add_argument("--round-to", type=int, default=1,
+                    help="round kept counts down to a multiple (TPU lane "
+                         "alignment, e.g. 128)")
+    ap.add_argument("--lam", type=float, default=1e-4,
+                    help="ridge strength, relative to mean(diag(Sigma))")
+    ap.add_argument("--ckpt-in", default=None,
+                    help="train checkpoint dir to load dense params from "
+                         "(newest valid step; fresh init when omitted)")
+    ap.add_argument("--out", default=None,
+                    help="output dir for the pruned checkpoint + "
+                         "report.json (print-only when omitted)")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh shape, 'DxM' (data x model) or "
+                         "'PxDxM' with a pod axis, e.g. --mesh 2x4; the "
+                         "pipeline then runs inside this mesh context")
+    ap.add_argument("--calib-sharded", action="store_true",
+                    help="shard the calibration statistics over --mesh: "
+                         "per-unit covariance/Gram blocks column-sharded "
+                         "over the model axis, batch contributions "
+                         "psum-reduced — no device holds a full Sigma "
+                         "(requires --mesh)")
     ap.add_argument("--calib-ckpt", default=None,
                     help="directory for resumable calibration-statistics "
                          "checkpoints (CalibrationEngine accumulator is "
                          "saved every --calib-ckpt-every batches and the "
                          "pass resumes from the newest valid one)")
-    ap.add_argument("--calib-ckpt-every", type=int, default=8)
+    ap.add_argument("--calib-ckpt-every", type=int, default=8,
+                    help="batches between calibration checkpoints")
     args = ap.parse_args()
+    if args.calib_sharded and not args.mesh:
+        ap.error("--calib-sharded requires --mesh")
 
     cfg = resolve_config(args.arch)
     model = build_model(cfg)
@@ -76,7 +118,8 @@ def main():
         if args.mesh else None
     t0 = time.time()
     kw = dict(progress=print, ckpt_dir=args.calib_ckpt,
-              ckpt_every=args.calib_ckpt_every)
+              ckpt_every=args.calib_ckpt_every,
+              mesh=ctx if args.calib_sharded else None)
     if ctx is not None:
         with ctx:
             new_params, new_cfg, report = corp_prune(model, params, stream,

@@ -124,6 +124,44 @@ def test_gram_ops_default_dispatch_cpu():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("n,fx,fy,bf,bn", [
+    (256, 128, 64, 128, 128),     # divisible shard tile
+    (300, 100, 48, 32, 128),      # all dims padded, local tile only
+    (128, 96, 96, 128, 512),      # square cross == gram
+])
+def test_gram_cross_vs_ref(n, fx, fy, bf, bn):
+    """Rectangular X^T Y slab (the per-shard gram) matches the reference —
+    zero-padding applies to each input's local shape independently."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(7))
+    x = jax.random.normal(kx, (n, fx))
+    y = jax.random.normal(ky, (n, fy))
+    a = gops.gram_cross(x, y, impl="interpret", bf=bf, bn=bn)
+    b = gref.gram_cross(x, y)
+    assert a["s2"].shape == (fx, fy) and a["s1"].shape == (fy,)
+    np.testing.assert_allclose(np.asarray(a["s2"]), np.asarray(b["s2"]),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(a["s1"]), np.asarray(b["s1"]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gram_cross_column_blocks_tile_full_gram():
+    """Concatenating every shard's gram_cross slab over the column axis must
+    reproduce gram(x) exactly — the invariant the model-sharded calibration
+    layout rests on (docs/calibration.md)."""
+    x = jax.random.normal(jax.random.PRNGKey(11), (192, 64))
+    full = gref.gram(x)
+    m = 4
+    fl = x.shape[1] // m
+    slabs = [gops.gram_cross(x, x[:, j * fl:(j + 1) * fl], impl="ref")
+             for j in range(m)]
+    s2 = np.concatenate([np.asarray(s["s2"]) for s in slabs], axis=1)
+    s1 = np.concatenate([np.asarray(s["s1"]) for s in slabs])
+    np.testing.assert_allclose(s2, np.asarray(full["s2"]), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(s1, np.asarray(full["s1"]), rtol=1e-5,
+                               atol=1e-5)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 1000))
 def test_gram_psd_property(seed):

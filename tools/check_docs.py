@@ -1,0 +1,72 @@
+"""Documentation link checker (CI docs job; also run by tests/test_docs.py).
+
+Scans every tracked markdown file for local links/images and fails when a
+target file doesn't exist — so README/docs references can't rot silently as
+files move. External (http/mailto) links and pure in-page anchors are
+skipped; a `path#anchor` link is checked for the file part only.
+
+Run:  python tools/check_docs.py [repo_root]
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) and ![alt](target); stops at the first ')' — markdown
+# targets here never contain parentheses.
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "_cache", "node_modules"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path: str, root: str):
+    """-> list of (line_no, target) for broken local links in ``path``."""
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        in_code = False
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+                continue
+            if in_code:
+                continue
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(("http://", "https://", "mailto:", "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                base = root if rel.startswith("/") else os.path.dirname(path)
+                resolved = os.path.normpath(os.path.join(base,
+                                                         rel.lstrip("/")))
+                if not os.path.exists(resolved):
+                    broken.append((lineno, target))
+    return broken
+
+
+def main(root: str = ".") -> int:
+    root = os.path.abspath(root)
+    n_files = n_links_broken = 0
+    for path in sorted(md_files(root)):
+        n_files += 1
+        for lineno, target in check_file(path, root):
+            print(f"BROKEN {os.path.relpath(path, root)}:{lineno} "
+                  f"-> {target}")
+            n_links_broken += 1
+    print(f"checked {n_files} markdown files: "
+          f"{'FAIL, ' + str(n_links_broken) + ' broken' if n_links_broken else 'all links resolve'}")
+    return 1 if n_links_broken else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
