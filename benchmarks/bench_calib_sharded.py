@@ -26,6 +26,7 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from repro.launch.mesh import force_host_devices  # noqa: E402
 
@@ -91,6 +92,17 @@ def main():
         np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4),
         s_sharded, s_single)
 
+    # bf16 streaming composes with sharding: per-shard gram_cross ingests
+    # bf16 local tiles, accumulators stay fp32 — must hold the same Sigma
+    # tolerance as the unsharded bf16 gate (one shared metric + tolerance)
+    from benchmarks.bench_calibration import BF16_SIGMA_TOL, sigma_relerr
+    sharded_bf16 = CalibrationEngine(model, units, phase=1, mesh=mesh,
+                                     stats_dtype="bfloat16")
+    s_bf16, t_bf16 = timed(sharded_bf16)
+    err = sigma_relerr(s_sharded, s_bf16)
+    assert err <= BF16_SIGMA_TOL, (
+        f"sharded bf16 stream Sigma relerr {err:.2e} > {BF16_SIGMA_TOL:.0e}")
+
     # footprint, measured on live accumulators
     acc1 = single.init_stats(params, batches[0])
     acc2 = sharded.init_stats(params, batches[0])
@@ -109,6 +121,8 @@ def main():
     print(f"calib_sharded_2x2,{t_sharded*1e6:.0f},"
           f"{b_sharded} B/device stats "
           f"({b_single/b_sharded:.2f}x smaller, parity OK)")
+    print(f"calib_sharded_bf16_stream,{t_bf16*1e6:.0f},"
+          f"sigma_relerr={err:.2e} vs fp32-stream sharded (tol 1e-2)")
     assert b_sharded < b_single, (b_sharded, b_single)
     return 0
 

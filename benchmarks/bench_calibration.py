@@ -1,21 +1,28 @@
-"""Calibration throughput: fused CalibrationEngine vs per-unit loop.
+"""Calibration throughput: fused CalibrationEngine vs per-unit loop, plus
+the bf16-streaming and gram-autotune gates.
 
 CORP's entire cost is the calibration pass, so this is the number behind the
-paper's "under 20 minutes on a single GPU" claim. Two ways to gather the
-same pass-1 statistics:
+paper's "under 20 minutes on a single GPU" claim. Three gates:
 
-  legacy  — one jitted statistics step PER UNIT, each re-running the full
-            model forward for its taps (what a naive per-unit implementation
-            does; identical to corp_prune_streamed with unit_group_size=1),
-            with host-side tree-adds between batches;
-  fused   — repro.core.calibrate.CalibrationEngine: ONE jitted step per
-            batch reduces every unit's statistics from a single forward,
-            accumulating into a donated on-device pytree.
+  fused >= legacy — one jitted statistics step PER UNIT, each re-running
+            the full model forward for its taps, with host-side tree-adds
+            (the naive per-unit implementation) vs ONE jitted step per
+            batch reducing every unit's statistics from a single forward
+            into a donated on-device pytree. Identical statistics
+            (linearity); the fused engine must not be slower.
 
-Both produce identical statistics (linearity); the fused engine does ~1/U
-of the forward work for U units plus zero host round-trips, so its
-tokens/sec must come out >= the loop — asserted at the end so regressions
-fail loudly in CI.
+  bf16 streaming — `stats_dtype="bfloat16"` must (a) halve the activation
+            bytes the calibration pass streams (measured on the real tap
+            tape; ~2x, the moe mask stays fp32) and (b) stay within the
+            documented Sigma tolerance of the fp32 stream
+            (max|Δs2| / max|s2| <= 1e-2, see docs/kernels.md — accumulators
+            are fp32 either way, only per-tap rounding differs).
+
+  autotune — the roofline-autotuned (bf, bn) must never be predicted
+            slower than the fixed legacy 128/512 tiles on the benchmark
+            shapes (the candidate set contains 128/512, so a regression
+            here means the cost model inverted; see
+            repro.kernels.gram.autotune).
 
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_calibration.py
 """
@@ -30,12 +37,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import get_config, reduced  # noqa: E402
 from repro.core import CalibrationEngine, discover_units  # noqa: E402
 from repro.core import stats as stats_mod  # noqa: E402
+from repro.kernels.gram import autotune  # noqa: E402
 from repro.models import build_model  # noqa: E402
+from repro.models import common as model_common  # noqa: E402
+
+#: documented bf16-stream Sigma tolerance (docs/kernels.md): max abs
+#: second-moment deviation relative to the largest fp32 entry.
+BF16_SIGMA_TOL = 1e-2
 
 
 def _batches(cfg, n, B, seed=0):
@@ -73,6 +87,29 @@ def run_fused(engine, params, batches):
     return engine.run(params, batches)
 
 
+def tap_bytes(model, params, batch, stats_dtype) -> int:
+    """Bytes the calibration pass streams per batch in activation taps —
+    the HBM traffic the stats_dtype knob is meant to halve."""
+    taps = {}
+    with model_common.tap_dtype(stats_dtype):
+        model.apply(params, batch, taps=taps)
+    return sum(np.asarray(t).size * np.asarray(t).dtype.itemsize
+               for t in jax.tree.leaves(taps))
+
+
+def sigma_relerr(fp32_stats, bf16_stats) -> float:
+    """max over dense units of max|s2_bf16 - s2_fp32| / max|s2_fp32|."""
+    worst = 0.0
+    for name, st in fp32_stats.items():
+        if "s2" not in st:
+            continue
+        a = np.asarray(st["s2"], np.float64)
+        b = np.asarray(bf16_stats[name]["s2"], np.float64)
+        worst = max(worst, float(np.max(np.abs(a - b)) /
+                                 max(np.max(np.abs(a)), 1e-30)))
+    return worst
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deit-base")
@@ -97,16 +134,19 @@ def main():
         np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4), fused0, legacy0)
 
     def timeit(fn):
+        """-> (best seconds, last output) — callers reuse the output so
+        gates never re-run a pass they already timed."""
         best = float("inf")
+        out = None
         for _ in range(args.repeats):
             t0 = time.perf_counter()
             out = fn()
             jax.block_until_ready(jax.tree.leaves(out))
             best = min(best, time.perf_counter() - t0)
-        return best
+        return best, out
 
-    t_legacy = timeit(lambda: run_legacy(legacy_steps, params, batches))
-    t_fused = timeit(lambda: run_fused(engine, params, batches))
+    t_legacy, _ = timeit(lambda: run_legacy(legacy_steps, params, batches))
+    t_fused, stats_fp32 = timeit(lambda: run_fused(engine, params, batches))
     tps_legacy = n_tok / t_legacy
     tps_fused = n_tok / t_fused
 
@@ -119,6 +159,39 @@ def main():
     assert tps_fused >= tps_legacy, (
         f"fused engine slower than per-unit loop: "
         f"{tps_fused:.0f} < {tps_legacy:.0f} tok/s")
+
+    # --- gate 2: bf16 streaming — ~2x less activation traffic at parity --
+    eng_bf16 = CalibrationEngine(model, units, phase=1,
+                                 stats_dtype="bfloat16")
+    t_bf16, stats_bf16 = timeit(lambda: run_fused(eng_bf16, params, batches))
+    b_fp32 = tap_bytes(model, params, batches[0], jnp.float32)
+    b_bf16 = tap_bytes(model, params, batches[0], jnp.bfloat16)
+    err = sigma_relerr(stats_fp32, stats_bf16)
+    print(f"calib_bf16_stream,{t_bf16*1e6:.0f},"
+          f"{b_fp32/b_bf16:.2f}x fewer activation bytes "
+          f"({b_fp32} -> {b_bf16} B/batch), sigma_relerr={err:.2e}")
+    assert b_fp32 / b_bf16 >= 1.9, (
+        f"bf16 streaming saved only {b_fp32/b_bf16:.2f}x activation bytes")
+    assert err <= BF16_SIGMA_TOL, (
+        f"bf16-stream Sigma deviates {err:.2e} > {BF16_SIGMA_TOL:.0e} "
+        f"from the fp32 stream")
+
+    # --- gate 3: autotuned tiles never predicted slower than 128/512 -----
+    shapes = sorted({(args.batch_size * ((cfg.img_size // cfg.patch) ** 2
+                                         + 1), cfg.d_ff)}
+                    | set(autotune.DEFAULT_SHAPES))
+    worst = 1e9
+    for (n, f) in shapes:
+        for dt in ("float32", "bfloat16"):
+            bf, bn = autotune.choose_tiles(n, f, dt)
+            t_auto = autotune.predicted_time(n, f, dt, bf, bn)
+            t_fixed = autotune.predicted_time(n, f, dt, 128, 512)
+            assert t_auto <= t_fixed, (
+                f"autotuned ({bf},{bn}) predicted slower than fixed "
+                f"(128,512) on N={n} F={f} {dt}: {t_auto} > {t_fixed}")
+            worst = min(worst, t_fixed / t_auto)
+    print(f"calib_gram_autotune,0,predicted >= fixed 128/512 on "
+          f"{len(shapes)}x2 shapes (min speedup {worst:.2f}x)")
     return 0
 
 

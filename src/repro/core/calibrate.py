@@ -22,7 +22,14 @@ claim holds. ``CalibrationEngine`` owns that hot path:
   * **second moments through the Pallas gram kernel** — the per-unit
     ``X^T X`` reductions inside the step dispatch to
     ``repro.kernels.gram`` (streaming MXU kernel on TPU, zero-padded for
-    arbitrary shapes; plain-jnp reference elsewhere);
+    arbitrary shapes, tile sizes autotuned per shape; plain-jnp reference
+    elsewhere);
+  * **bf16 activation streaming** — ``stats_dtype="bfloat16"`` emits the
+    model's activation taps in bf16 and streams them into the gram kernel
+    as-is, halving calibration HBM traffic; every accumulator stays fp32
+    (the kernel casts per tile inside VMEM). Sigma tolerance vs the fp32
+    stream is gated in ``benchmarks/bench_calibration.py`` and studied in
+    docs/kernels.md;
   * **mesh-sharded** — pass ``mesh=`` and the fused step runs under pjit
     with an explicit sharding for every statistic leaf
     (``repro.distrib.sharding.stats_specs``): per-unit covariance/Gram
@@ -67,6 +74,7 @@ import numpy as np
 from repro.core import stats as stats_mod
 from repro.core.units import Unit
 from repro.distrib import sharding as dist_sharding
+from repro.models import common as model_common
 
 
 class CalibrationEngine:
@@ -91,6 +99,12 @@ class CalibrationEngine:
         only their device layout changes.
       model_axis: mesh axis name that partitions statistic columns
         (ignored without ``mesh``).
+      stats_dtype: dtype activation taps are *streamed* in ("float32"
+        default, "bfloat16" to halve calibration HBM traffic). Every
+        statistic still accumulates in fp32 — the gram kernel casts tiles
+        inside VMEM, the other reductions cast at their inputs — so only
+        the per-tap rounding differs (docs/kernels.md quantifies the Sigma
+        tolerance; benchmarks/bench_calibration.py gates it).
 
     Attributes:
       fingerprint: hash of what this engine accumulates (phase, unit set,
@@ -103,12 +117,14 @@ class CalibrationEngine:
 
     def __init__(self, model, units: List[Unit], *, phase: int = 1,
                  plan: Optional[Dict] = None, donate: bool = True,
-                 mesh=None, model_axis: str = "model"):
+                 mesh=None, model_axis: str = "model",
+                 stats_dtype="float32"):
         assert phase in (1, 2), phase
         assert phase == 1 or plan is not None, "phase 2 needs a keep/prune plan"
         self.model = model
         self.units = list(units)
         self.phase = phase
+        self.stats_dtype = jnp.dtype(stats_dtype)
         self.plan = None if plan is None else {
             k: tuple(jnp.asarray(a) for a in v) for k, v in plan.items()}
         if mesh is None:
@@ -120,7 +136,9 @@ class CalibrationEngine:
 
         def reduce_fn(params, batch):
             taps = {}
-            model.apply(params, batch, taps=taps)
+            # entered at trace time: taps stream in stats_dtype end-to-end
+            with model_common.tap_dtype(self.stats_dtype):
+                model.apply(params, batch, taps=taps)
             if phase == 1:
                 return stats_mod.pass1_reduce(taps, self.units, model.cfg,
                                               shard=self.shard)
@@ -147,9 +165,11 @@ class CalibrationEngine:
         directory can never resume statistics gathered for a different
         configuration — including a checkpoint written under a *different
         mesh*, whose shard-local accumulation order (and donation layout)
-        this engine cannot reproduce."""
+        this engine cannot reproduce — or under a different streaming
+        dtype, whose per-tap rounding differs."""
         h = hashlib.sha256()
-        h.update(f"phase={self.phase}".encode())
+        h.update(f"phase={self.phase};stats_dtype={self.stats_dtype}"
+                 .encode())
         for u in self.units:
             h.update(f";{u.name}:{u.kind}:{u.attn_class}".encode())
         if self.plan is not None:
@@ -282,7 +302,8 @@ class CalibrationEngine:
 
 def run_pass(model, units: List[Unit], params, batches: Iterable, *,
              phase: int = 1, plan: Optional[Dict] = None,
-             checkpointer=None, mesh=None) -> Dict:
+             checkpointer=None, mesh=None, stats_dtype="float32") -> Dict:
     """One-call convenience wrapper: build an engine and run one pass."""
-    eng = CalibrationEngine(model, units, phase=phase, plan=plan, mesh=mesh)
+    eng = CalibrationEngine(model, units, phase=phase, plan=plan, mesh=mesh,
+                            stats_dtype=stats_dtype)
     return eng.run(params, batches, checkpointer=checkpointer)

@@ -423,7 +423,7 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
                pc: PruneConfig = PruneConfig(),
                progress: Optional[Callable[[str], None]] = None,
                ckpt_dir: Optional[str] = None, ckpt_every: int = 8,
-               mesh=None):
+               mesh=None, stats_dtype="float32"):
     """One-shot CORP (Alg. 1): calibrate -> rank -> compensate -> fold.
 
     Args:
@@ -442,6 +442,9 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
         covariance/Gram blocks column-sharded over the model axis, batch
         contributions psum-reduced, no replicated full Sigma on any device.
         Ranking and folding still happen on host from the gathered sums.
+      stats_dtype: activation streaming dtype for both calibration passes
+        ("float32" default; "bfloat16" halves calibration HBM traffic,
+        accumulators stay fp32 — see ``CalibrationEngine``).
 
     Returns:
       ``(pruned_params, pruned_config, report)`` — a physically smaller
@@ -458,7 +461,8 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
 
     t0 = time.time()
     say("pass 1: ranking/MLP statistics")
-    engine1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh)
+    engine1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh,
+                                          stats_dtype=stats_dtype)
     p1 = engine1.run(params, calib_batches(),
                      checkpointer=_checkpointer(ckpt_dir, "pass1",
                                                 ckpt_every))
@@ -503,7 +507,8 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
         t0 = time.time()
         say("pass 2: attention compensation statistics")
         engine2 = calib_mod.CalibrationEngine(model, units, phase=2,
-                                              plan=attn_plan, mesh=mesh)
+                                              plan=attn_plan, mesh=mesh,
+                                              stats_dtype=stats_dtype)
         p2 = engine2.run(params, calib_batches(),
                          checkpointer=_checkpointer(ckpt_dir, "pass2",
                                                     ckpt_every))
@@ -551,7 +556,7 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                         pc: PruneConfig = PruneConfig(), *,
                         unit_group_size: int = 2,
                         progress: Optional[Callable[[str], None]] = None,
-                        mesh=None):
+                        mesh=None, stats_dtype="float32"):
     """Memory-bounded CORP: identical output to ``corp_prune`` (statistics
     are linear, so partitioning the unit set changes nothing), but only
     ``unit_group_size`` units' statistics are resident at a time.
@@ -570,6 +575,10 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
         model-sharded across the mesh (``CalibrationEngine(mesh=...)``),
         so per-device residency is group_size x Sigma/m. This is the
         671B-scale configuration from ROADMAP's "Sharded engine" item.
+      stats_dtype: activation streaming dtype for every group's passes
+        ("float32" default; "bfloat16" halves calibration HBM traffic —
+        composes with both bounds above, since it shrinks the *stream*
+        while they bound the *resident statistics*).
 
     Returns:
       ``(pruned_params, pruned_config, report)`` as ``corp_prune``, with
@@ -588,7 +597,8 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
     for gi, units in enumerate(groups):
         say(f"group {gi+1}/{len(groups)}: "
             + ", ".join(u.name for u in units))
-        p1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh) \
+        p1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh,
+                                         stats_dtype=stats_dtype) \
             .run(params, calib_batches())
         plan = {}
         for u in units:
@@ -619,7 +629,8 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
         p2 = {}
         if attn_plan:
             p2 = calib_mod.CalibrationEngine(model, units, phase=2,
-                                             plan=attn_plan, mesh=mesh) \
+                                             plan=attn_plan, mesh=mesh,
+                                             stats_dtype=stats_dtype) \
                 .run(params, calib_batches())
         for u in units:
             if u.name not in plan:

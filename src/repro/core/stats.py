@@ -18,7 +18,11 @@ Two streaming passes over the (unlabeled) calibration set:
 Every statistic is a *linear* reduction over calibration samples, so under
 pjit the sums over the (data-sharded) batch axis compile to single psums —
 CORP distributes embarrassingly (DESIGN.md §2.1). Statistics accumulate in
-fp32 regardless of activation dtype (paper §Limitations).
+fp32 regardless of activation dtype (paper §Limitations); the *streaming*
+dtype is whatever the taps arrive in — the engine's ``stats_dtype`` knob
+emits bf16 taps to halve calibration HBM traffic, and dense second moments
+carry that dtype into the gram kernel (fp32 VMEM accumulator, see
+docs/kernels.md for the tolerance study).
 
 These are the reduction *definitions*; the streaming driver that fuses them
 into one donated-accumulator step per batch is
@@ -46,26 +50,32 @@ log = logging.getLogger("repro.stats")
 
 
 def _flat_tokens(x):
-    """(..., F) -> (N, F) fp32."""
-    return x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    """(..., F) -> (N, F), keeping the tap's streaming dtype.
+
+    Taps arrive in the engine's ``stats_dtype`` (fp32 default, bf16 to
+    halve calibration HBM traffic); the dense second moments must stream in
+    that dtype all the way into the gram kernel, which casts per tile
+    inside VMEM. Everything that accumulates is fp32 downstream.
+    """
+    return x.reshape(-1, x.shape[-1])
 
 
 ACTIVE_EPS = 1e-2   # |x| > eps counts as 'active' (appendix E ranking)
 
 
 def _moments(x):
-    """x: (N, F) -> dict(n, s1, s2, na).
+    """x: (N, F) any float dtype -> dict(n, s1, s2, na), all fp32.
 
-    The (F, F) second moment + column sums go through the gram op, which
-    dispatches to the Pallas streaming kernel on TPU (zero-padded to the
-    block grid for arbitrary shapes) and the plain-jnp reference elsewhere.
+    The (F, F) second moment + column sums go through the gram op in x's
+    own dtype, which dispatches to the Pallas streaming kernel on TPU
+    (zero-padded to the block grid for arbitrary shapes; fp32 VMEM
+    accumulator) and the plain-jnp reference elsewhere.
     """
-    xf = x.astype(jnp.float32)
-    g = gram_ops.gram(xf)
-    return {"n": jnp.asarray(xf.shape[0], jnp.float32),
+    g = gram_ops.gram(x)
+    return {"n": jnp.asarray(x.shape[0], jnp.float32),
             "s1": g["s1"],
             "s2": g["s2"],
-            "na": jnp.sum((jnp.abs(xf) > ACTIVE_EPS).astype(jnp.float32),
+            "na": jnp.sum((jnp.abs(x) > ACTIVE_EPS).astype(jnp.float32),
                           axis=0)}
 
 
@@ -99,8 +109,7 @@ def _sharded_moments(x, shard):
         x = jnp.pad(x, [(0, 0)] * (x.ndim - 2) + [(0, pad), (0, 0)])
     g = gram_ops.gram_sharded(x, shard.mesh, model_axis=shard.model_axis,
                               batch_axes=baxes)
-    xf = x.astype(jnp.float32)
-    na = jnp.sum((jnp.abs(xf) > ACTIVE_EPS).astype(jnp.float32), axis=-2)
+    na = jnp.sum((jnp.abs(x) > ACTIVE_EPS).astype(jnp.float32), axis=-2)
     lead = x.shape[:-2]
     n = jnp.full(lead, float(N), jnp.float32) if lead \
         else jnp.asarray(float(N), jnp.float32)
@@ -176,6 +185,9 @@ def _p1_attn(taps, unit: Unit, cfg):
     k = taps[f"{unit.tap_prefix}/{kk}"]
 
     def one(q, k):
+        # taps may stream bf16; the energy reductions accumulate fp32
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32)
         B = q.shape[0]
         G = unit.n_groups
         qg = _group_q(q, G)                       # (B,G,TQ,d)
@@ -209,6 +221,9 @@ def _p2_attn(taps, unit: Unit, keep, prune):
     k = taps[f"{unit.tap_prefix}/{kk}"]
 
     def one(q, k, keep, prune):
+        # taps may stream bf16; ridge-system inputs accumulate fp32
+        q = q.astype(jnp.float32)
+        k = k.astype(jnp.float32)
         G = unit.n_groups
         qg = _group_q(q, G)                        # (B,G,TQ,d)
         kg = k.transpose(0, 2, 1, 3)               # (B,G,T,d)

@@ -4,8 +4,16 @@ accumulation — the CORP calibration statistics hot-spot (Alg. 3 inputs).
 The token dimension N streams through VMEM in (bn, bf) tiles; the (bf, bf)
 fp32 accumulator lives in VMEM scratch across the token grid dimension, so
 each X tile is read from HBM exactly once per output block row/column —
-arithmetic intensity bn/2 flops per byte on the MXU (bn >= 256 is compute
-bound at 197 TFLOP/s / 819 GB/s).
+arithmetic intensity bf/itemsize flops per input byte on the MXU (bf = 128
+fp32 is compute bound at 197 TFLOP/s / 819 GB/s; bn only amortises
+per-grid-cell overhead, the accumulator never leaves VMEM). X tiles stream
+in their input dtype — feeding bf16 halves HBM traffic while the VMEM
+accumulator stays fp32 (the kernel casts per tile, which the MXU does
+in-flight).
+
+Tile sizes (bf, bn) default to the analytic roofline autotuner in
+``repro.kernels.gram.autotune`` (pass them explicitly to pin); the full
+derivation is in docs/kernels.md.
 
 grid = (F/bf, F/bf, N/bn)   [token dim innermost]
 """
@@ -17,6 +25,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.gram import autotune
+
+
+def _resolve_tiles(n, f, dtype, bf, bn):
+    """Fill unset tile sizes from the autotuner (cached per shape/dtype)."""
+    if bf is None or bn is None:
+        abf, abn = autotune.choose_tiles(int(n), int(f),
+                                         str(jnp.dtype(dtype)))
+        bf, bn = bf or abf, bn or abn
+    return bf, bn
 
 
 def _gram_kernel(xi_ref, xj_ref, s2_ref, s1_ref, acc_ref, col_ref, *, nn):
@@ -76,13 +95,19 @@ def _gram_cross_kernel(xi_ref, xj_ref, s2_ref, s1_ref, acc_ref, col_ref, *,
             s1_ref[...] = col_ref[...]
 
 
-def _round_up(n: int, b: int) -> int:
-    return -(-n // b) * b
+# one rounding rule shared with the autotuner's padding model — the cost
+# model is only valid while it mirrors the kernel's actual zero-padding
+_round_up = autotune._round_up
 
 
 @functools.partial(jax.jit, static_argnames=("bf", "bn", "interpret"))
-def gram(x, *, bf=128, bn=512, interpret=False):
+def gram(x, *, bf=None, bn=None, interpret=False):
     """x: (N, F) -> {'s2': (F,F) fp32, 's1': (F,) fp32 column sums}.
+
+    ``x`` may be any float dtype — tiles stream in that dtype and are cast
+    to fp32 inside VMEM (bf16 input halves HBM traffic, the accumulator
+    precision is unchanged). ``bf``/``bn`` default to the autotuned choice
+    for (N, F, dtype); pass ints to pin.
 
     Arbitrary (N, F) are supported: inputs are zero-padded up to the block
     grid (zero rows/columns contribute nothing to either linear reduction)
@@ -91,6 +116,7 @@ def gram(x, *, bf=128, bn=512, interpret=False):
     never trips a divisibility assertion.
     """
     N, F = x.shape
+    bf, bn = _resolve_tiles(N, F, x.dtype, bf, bn)
     bf = min(bf, F)
     bn = min(bn, N)
     Np, Fp = _round_up(N, bn), _round_up(F, bf)
@@ -123,19 +149,23 @@ def gram(x, *, bf=128, bn=512, interpret=False):
 
 
 @functools.partial(jax.jit, static_argnames=("bf", "bn", "interpret"))
-def gram_cross(x, y, *, bf=128, bn=512, interpret=False):
+def gram_cross(x, y, *, bf=None, bn=None, interpret=False):
     """x: (N, Fx), y: (N, Fy) -> {'s2': (Fx, Fy) fp32 X^T Y, 's1': (Fy,)}.
 
     The sharded-calibration building block: each model shard owns a column
     block Y of the activation matrix and computes its (Fx, Fy) slab of the
-    full gram plus Y's column sums. Zero-padding is applied independently to
-    X and Y's local shapes — a shard never pads (or even sees) another
-    shard's columns, which is what keeps per-shard VMEM traffic at
-    ``Fx*Fy/m`` instead of ``Fx^2``.
+    full gram plus Y's column sums. Tiles stream in the input dtype (fp32
+    accumulator regardless) and default to the autotuned choice for the
+    *local* (N, max(Fx, Fy)) shape — which is how the model-sharded path
+    gets per-shard tile tuning for free. Zero-padding is applied
+    independently to X and Y's local shapes — a shard never pads (or even
+    sees) another shard's columns, which is what keeps per-shard VMEM
+    traffic at ``Fx*Fy/m`` instead of ``Fx^2``.
     """
     N, Fx = x.shape
     Ny, Fy = y.shape
     assert N == Ny, (N, Ny)
+    bf, bn = _resolve_tiles(N, max(Fx, Fy), x.dtype, bf, bn)
     bfx, bfy = min(bf, Fx), min(bf, Fy)
     bn = min(bn, N)
     Np = _round_up(N, bn)

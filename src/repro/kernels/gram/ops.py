@@ -11,6 +11,12 @@ reduction, see ``repro.core.stats._moments``):
   * ``REPRO_GRAM_IMPL`` in {"ref", "pallas", "interpret"} forces a backend
     (interpret = Pallas interpreter, used by the CPU test suite).
 
+Tile sizes: ``bf``/``bn`` default to None = the analytic roofline autotuner
+(``repro.kernels.gram.autotune``, cached per shape/dtype); pass ints to pin,
+or set ``REPRO_GRAM_TILES=BF,BN`` to pin globally (what ``--gram-tiles`` in
+launch.prune sets). Inputs stream in their own dtype — pass bf16 activations
+to halve HBM traffic; accumulation is fp32 in all backends.
+
 Three entry points:
 
   ``gram(x)``                 full (F, F) second moment of one host's X.
@@ -21,7 +27,8 @@ Three entry points:
                               F/m) column tile (zero-padding included), so no
                               device ever materialises — or pads — a full
                               Sigma. Batch-axis contributions are psum-reduced
-                              inside the shard_map.
+                              inside the shard_map. Tiles autotune on the
+                              local shapes.
 """
 from __future__ import annotations
 
@@ -45,37 +52,55 @@ def _resolve_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
-def gram(x, impl=None, *, bf=128, bn=512):
-    """x: (N, F) -> {'s2': (F, F), 's1': (F,)} in fp32. Any (N, F)."""
+def _env_tiles(bf, bn):
+    """Apply the ``REPRO_GRAM_TILES=BF,BN`` global pin to unset tile args
+    (explicit arguments win; unset with no env falls through to the
+    autotuner inside the kernel)."""
+    env = os.environ.get("REPRO_GRAM_TILES", "")
+    if env:
+        ebf, ebn = (int(v) for v in env.split(","))
+        bf, bn = bf or ebf, bn or ebn
+    return bf, bn
+
+
+def gram(x, impl=None, *, bf=None, bn=None):
+    """x: (N, F) -> {'s2': (F, F), 's1': (F,)} in fp32. Any (N, F), any
+    float dtype (bf16 tiles stream at half the HBM traffic)."""
     impl = impl or _resolve_impl()
     if impl == "ref":
         return _ref.gram(x)
+    bf, bn = _env_tiles(bf, bn)
     return _pallas_gram(x, bf=bf, bn=bn, interpret=(impl == "interpret"))
 
 
-def gram_cross(x, y, impl=None, *, bf=128, bn=512):
+def gram_cross(x, y, impl=None, *, bf=None, bn=None):
     """x: (N, Fx), y: (N, Fy) -> {'s2': (Fx, Fy) X^T Y, 's1': (Fy,) column
     sums of Y} in fp32. The building block of the sharded gram: y is one
     shard's local column block of x."""
     impl = impl or _resolve_impl()
     if impl == "ref":
         return _ref.gram_cross(x, y)
+    bf, bn = _env_tiles(bf, bn)
     return _pallas_gram_cross(x, y, bf=bf, bn=bn,
                               interpret=(impl == "interpret"))
 
 
 def gram_sharded(x, mesh, *, model_axis="model", batch_axes=("data",),
-                 impl=None, bf=128, bn=512):
+                 impl=None, bf=None, bn=None):
     """Model-sharded gram: x (..., N, F) -> column-sharded {'s2', 's1'}.
 
     Args:
-      x: (..., N, F) activations. Leading dims (e.g. a scanned layer stack)
-        are vmapped; N (tokens) must be divisible by the product of the mesh
+      x: (..., N, F) activations, any float dtype — bf16 streams each
+        shard's tiles at half the HBM traffic (accumulation stays fp32
+        inside the kernel). Leading dims (e.g. a scanned layer stack) are
+        vmapped; N (tokens) must be divisible by the product of the mesh
         ``batch_axes`` sizes and F by the ``model_axis`` size.
       mesh: the ``jax.sharding.Mesh`` to shard over.
       model_axis: mesh axis name that partitions Sigma's columns.
       batch_axes: mesh axes the token rows are sharded over; their partial
         sums are psum-reduced inside the shard_map.
+      bf, bn: kernel tiles; None = autotune on each shard's LOCAL
+        (N_local, F/m) tile shape.
 
     Returns:
       {'s2': (..., F, F) fp32 with spec P(..., None, model_axis),
@@ -100,14 +125,15 @@ def gram_sharded(x, mesh, *, model_axis="model", batch_axes=("data",),
     lead_spec = (None,) * lead
 
     def local(xl):
-        xf = xl.astype(jnp.float32)
+        # keep the streaming dtype: the kernel casts tiles to fp32 in VMEM,
+        # so a bf16 xl halves this shard's HBM reads
         j = jax.lax.axis_index(model_axis)
-        xj = jax.lax.dynamic_slice_in_dim(xf, j * fl, fl, axis=xf.ndim - 1)
+        xj = jax.lax.dynamic_slice_in_dim(xl, j * fl, fl, axis=xl.ndim - 1)
 
         fn = lambda a, b: gram_cross(a, b, impl=impl, bf=bf, bn=bn)
         for _ in range(lead):
             fn = jax.vmap(fn)
-        out = fn(xf, xj)
+        out = fn(xl, xj)
         if batch_axes:
             out = jax.lax.psum(out, batch_axes)
         return out

@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -86,9 +87,25 @@ def main():
                          "pass resumes from the newest valid one)")
     ap.add_argument("--calib-ckpt-every", type=int, default=8,
                     help="batches between calibration checkpoints")
+    ap.add_argument("--stats-dtype", default="float32",
+                    choices=["float32", "bfloat16"],
+                    help="dtype activation taps are STREAMED in during "
+                         "calibration (bfloat16 halves calibration HBM "
+                         "traffic; every statistic still accumulates fp32)")
+    ap.add_argument("--gram-tiles", default=None,
+                    help="pin the gram kernel tile sizes as 'BF,BN' (e.g. "
+                         "128,512) instead of the per-shape roofline "
+                         "autotuner (repro.kernels.gram.autotune)")
     args = ap.parse_args()
     if args.calib_sharded and not args.mesh:
         ap.error("--calib-sharded requires --mesh")
+    if args.gram_tiles:
+        try:
+            bf, bn = (int(v) for v in args.gram_tiles.split(","))
+        except ValueError:
+            ap.error(f"--gram-tiles must be 'BF,BN' ints, "
+                     f"got {args.gram_tiles!r}")
+        os.environ["REPRO_GRAM_TILES"] = f"{bf},{bn}"
 
     cfg = resolve_config(args.arch)
     model = build_model(cfg)
@@ -119,7 +136,8 @@ def main():
     t0 = time.time()
     kw = dict(progress=print, ckpt_dir=args.calib_ckpt,
               ckpt_every=args.calib_ckpt_every,
-              mesh=ctx if args.calib_sharded else None)
+              mesh=ctx if args.calib_sharded else None,
+              stats_dtype=args.stats_dtype)
     if ctx is not None:
         with ctx:
             new_params, new_cfg, report = corp_prune(model, params, stream,

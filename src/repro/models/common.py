@@ -106,15 +106,44 @@ def apply_rope(x, positions, theta: float):
 # tap (activation tape) utilities
 # ---------------------------------------------------------------------------
 
+_TAP_DTYPE = jnp.float32
+
+
+class tap_dtype:
+    """Trace-time context setting the dtype activation taps are emitted in.
+
+    fp32 (default) maximises statistics fidelity; bf16 halves the
+    calibration pass's activation HBM traffic end-to-end — the gram kernel
+    streams bf16 tiles and still accumulates fp32 in VMEM (the
+    ``stats_dtype`` knob of ``repro.core.calibrate.CalibrationEngine``
+    wraps the model forward in this context). A Python-level knob: it must
+    be active while the forward is *traced*, which the engine guarantees by
+    entering it inside its jitted reduce function.
+    """
+
+    def __init__(self, dtype):
+        self.dtype = jnp.dtype(dtype)
+
+    def __enter__(self):
+        global _TAP_DTYPE
+        self._prev, _TAP_DTYPE = _TAP_DTYPE, self.dtype
+        return self
+
+    def __exit__(self, *exc):
+        global _TAP_DTYPE
+        _TAP_DTYPE = self._prev
+        return False
+
+
 def tap(taps: dict | None, name: str, value):
     """Record an intermediate activation for CORP calibration.
 
     ``taps`` is None when not taping (no memory cost). Values are stored in
-    fp32 — statistics precision matters more than tape size for calibration
-    batches.
+    the active ``tap_dtype`` — fp32 by default; every statistics reduction
+    downstream accumulates in fp32 regardless of the tape dtype.
     """
     if taps is not None:
-        taps[name] = value.astype(jnp.float32)
+        taps[name] = value.astype(_TAP_DTYPE)
 
 
 def merge_taps(dst: dict | None, src: dict, prefix: str):

@@ -17,11 +17,14 @@ Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 from __future__ import annotations
 
 import dataclasses
+import logging
 import re
 from typing import Dict
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.roofline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,17 +53,33 @@ _OP_RE = re.compile(
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
 
+_WARNED_DTYPES: set = set()
+
+
 def _shape_bytes(shapes_str: str) -> int:
+    """Total bytes of every typed shape in an HLO shape string.
+
+    Dtypes missing from ``_DTYPE_BYTES`` (e.g. ``f8e4m3`` on fp8-quantised
+    modules) are counted with a conservative 1-byte-per-element floor and
+    warned once per dtype — silently dropping them undercounted collective
+    traffic for any extended-dtype model.
+    """
     total = 0
     for dt, dims in _SHAPE_RE.findall(shapes_str):
-        if dt not in _DTYPE_BYTES:
-            continue
+        nbytes = _DTYPE_BYTES.get(dt)
+        if nbytes is None:
+            if dt not in _WARNED_DTYPES:
+                _WARNED_DTYPES.add(dt)
+                log.warning(
+                    "roofline: unknown HLO dtype %r — counting 1 byte/elem "
+                    "(add it to _DTYPE_BYTES for exact accounting)", dt)
+            nbytes = 1
         n = 1
         if dims:
             for d in dims.split(","):
                 if d:
                     n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        total += n * nbytes
     return total
 
 

@@ -24,17 +24,40 @@ def test_markdown_links_resolve():
 
 def test_readme_and_docs_exist():
     for rel in ("README.md", "docs/calibration.md", "docs/cli.md",
+                "docs/kernels.md", "docs/roofline.md",
                 "ROADMAP.md", "PAPER.md"):
         assert os.path.exists(os.path.join(ROOT, rel)), rel
+
+
+def _prune_flags():
+    src = open(os.path.join(ROOT, "src", "repro", "launch",
+                            "prune.py"), encoding="utf-8").read()
+    flags = set(re.findall(r'add_argument\("(--[a-z0-9-]+)"', src))
+    assert flags, "no flags parsed from launch/prune.py"
+    return flags
 
 
 def test_cli_doc_covers_every_prune_flag():
     """docs/cli.md must document every --flag launch/prune.py defines (so a
     new flag without docs fails here, not in review)."""
-    src = open(os.path.join(ROOT, "src", "repro", "launch",
-                            "prune.py"), encoding="utf-8").read()
-    flags = set(re.findall(r'add_argument\("(--[a-z-]+)"', src))
-    assert flags, "no flags parsed from launch/prune.py"
+    flags = _prune_flags()
     doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
     missing = {f for f in flags if f"`{f}`" not in doc}
     assert not missing, f"flags undocumented in docs/cli.md: {sorted(missing)}"
+
+
+def test_cli_doc_has_no_stale_prune_flags():
+    """The reverse direction: every `--flag` docs/cli.md's Flags table
+    documents must still exist in launch/prune.py — catches renamed or
+    removed flags leaving stale docs behind (the --rank-policy drift class
+    fixed in PR 2)."""
+    flags = _prune_flags()
+    doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8")
+    documented = set()
+    for line in doc:
+        if line.startswith("|"):
+            documented |= set(re.findall(r"`(--[a-z0-9-]+)`",
+                                         line.split("|")[1]))
+    assert documented, "no flags parsed from docs/cli.md's table"
+    stale = documented - flags
+    assert not stale, f"docs/cli.md documents removed flags: {sorted(stale)}"

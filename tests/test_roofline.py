@@ -28,6 +28,27 @@ def test_collective_parse():
     assert out["all-to-all"] == 0
 
 
+def test_collective_parse_unknown_dtype_floor(caplog):
+    """Dtypes missing from _DTYPE_BYTES (f8e4m3 etc.) must be counted with
+    a 1-byte-per-element floor and a warning — silently dropping them
+    undercounted collective traffic for fp8-quantised modules."""
+    import logging
+    from repro.roofline import analysis
+    analysis._WARNED_DTYPES.clear()
+    hlo = """
+  %ag = f8e4m3[256,128]{1,0} all-gather(%x), replica_groups=...
+  %ar = f32[64]{0} all-reduce(%y), to_apply=%sum
+"""
+    with caplog.at_level(logging.WARNING, logger="repro.roofline"):
+        out = collective_bytes(hlo)
+    assert out["all-gather"] == 256 * 128 * 1      # 1-byte floor
+    assert out["all-reduce"] == 64 * 4             # known dtypes unchanged
+    assert any("f8e4m3" in r.message for r in caplog.records)
+    # warned once per dtype, not once per shape
+    analysis._shape_bytes("f8e4m3[4]")
+    assert sum("f8e4m3" in r.message for r in caplog.records) == 1
+
+
 def test_jaxpr_flops_dense():
     a = jnp.zeros((64, 128))
     b = jnp.zeros((128, 32))
