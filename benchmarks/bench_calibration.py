@@ -24,7 +24,25 @@ paper's "under 20 minutes on a single GPU" claim. Three gates:
             here means the cost model inverted; see
             repro.kernels.gram.autotune).
 
+With ``--one-traversal`` the script instead runs the speculative-fusion
+gates (docs/pipeline.md):
+
+  hit-rate  — margin sweep on the DeiT (class-1) and granite (rope) reduced
+            configs: candidates from the first batch's running scores vs
+            final keep-sets from the full stream, plus the measured
+            speculative-accumulator memory overhead per margin. Emitted as
+            the markdown table docs/pipeline.md cites (``--table-out``
+            writes it to a file; the CI job uploads it so the doc's
+            numbers can be audited against a fresh run).
+
+  traversals == 1 — corp_prune(one_traversal=True) at the smallest
+            all-hit margin from the sweep must consume the calibration
+            stream exactly once (zero misses) and produce a pruned model
+            functionally identical to the two-pass baseline.
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_calibration.py
+      JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_calibration.py \\
+          --one-traversal --table-out /tmp/hit_rate.md
 """
 from __future__ import annotations
 
@@ -110,13 +128,169 @@ def sigma_relerr(fp32_stats, bf16_stats) -> float:
     return worst
 
 
+# ---------------------------------------------------------------------------
+# one-traversal speculative gates (--one-traversal)
+# ---------------------------------------------------------------------------
+
+SPEC_MARGINS = (0.0, 0.125, 0.25, 0.5, 1.0)
+SPEC_ARCHS = ("deit-base", "granite-8b")
+
+
+def _tree_bytes(shapes) -> int:
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(shapes))
+
+
+def _spec_sweep(arch: str, n_batches: int, batch_size: int):
+    """Hit-rate + memory-overhead rows for one arch across SPEC_MARGINS.
+
+    Candidates come from the FIRST batch's ranking scores (exactly what
+    ``corp_prune(one_traversal=True)`` uses), final keep-sets from the full
+    stream; hit-rate counts covered (unit, layer, group) rows. Memory is
+    ``jax.eval_shape`` of the speculative accumulators vs the dedicated
+    pass-2 accumulators for the same plan.
+    """
+    from repro.core import ranking as rank_mod
+    from repro.core.pruner import _keep_count
+    from repro.data import calib_stream
+
+    cfg = reduced(get_config(arch)).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    units = discover_units(cfg)
+    attn_units = [u for u in units if u.kind in ("attn", "mla", "cross")]
+    stream = calib_stream(cfg, n_samples=n_batches * batch_size,
+                          batch=batch_size)
+    batches = list(stream())
+    eng1 = CalibrationEngine(model, units, phase=1)
+    s0 = eng1.run(params, batches[:1])          # running scores, batch 0
+    s_all = eng1.run(params, batches)           # final scores, full stream
+
+    plan, keep_ns = {}, {}
+    for u in attn_units:
+        full = s_all[u.name]["rank"].shape[-1]
+        # the 50% protocol via the SAME rounding the gate's corp_prune
+        # uses, so the sweep's hit margins transfer to the gate exactly
+        keep_ns[u.name] = _keep_count(full, 0.5, 1)
+        plan[u.name] = rank_mod.rank_attn(s_all[u.name], keep_ns[u.name])
+    e2 = CalibrationEngine(model, units, phase=2, plan=plan)
+    p2_bytes = _tree_bytes(jax.eval_shape(e2._reduce, params, batches[0]))
+
+    rows = []
+    for margin in SPEC_MARGINS:
+        spec_plan = {u.name: rank_mod.candidate_attn(
+            s0[u.name], keep_ns[u.name], margin) for u in attn_units}
+        total = hit = 0
+        for u in attn_units:
+            cand = spec_plan[u.name]
+            keep = np.asarray(plan[u.name][0])
+            c2 = cand.reshape(-1, cand.shape[-1])
+            k2 = keep.reshape(-1, keep.shape[-1])
+            for cr, kr in zip(c2, k2):
+                total += 1
+                hit += bool(np.isin(kr, cr).all())
+        es = CalibrationEngine(model, units, phase="1+2",
+                               spec_plan=spec_plan)
+        spec_bytes = _tree_bytes(jax.eval_shape(
+            es._reduce, params, batches[0])["p2spec"])
+        rows.append({"arch": arch, "margin": margin,
+                     "cand": int(next(iter(spec_plan.values())).shape[-1]),
+                     "keep": keep_ns[next(iter(keep_ns))],
+                     "hit_rate": hit / max(total, 1),
+                     "mem_ratio": spec_bytes / max(p2_bytes, 1)})
+    return rows
+
+
+def one_traversal_gates(args) -> int:
+    """--one-traversal mode: hit-rate table + the traversal-count gate."""
+    from repro.core import PruneConfig, corp_prune
+    from repro.data import calib_stream
+
+    rows = []
+    for arch in SPEC_ARCHS:
+        rows += _spec_sweep(arch, args.batches, args.batch_size)
+
+    lines = ["| arch | margin | candidates/keep | hit-rate | spec mem / "
+             "pass-2 mem |",
+             "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(f"| {r['arch']} | {r['margin']:.3f} | "
+                     f"{r['cand']}/{r['keep']} | {r['hit_rate']:.2f} | "
+                     f"{r['mem_ratio']:.2f}x |")
+    table = "\n".join(lines)
+    print(table)
+    if args.table_out:
+        with open(args.table_out, "w") as f:
+            f.write("# One-traversal speculative calibration: margin vs "
+                    "hit-rate vs memory\n\n"
+                    "Generated by `benchmarks/bench_calibration.py "
+                    "--one-traversal` (consumed by docs/pipeline.md).\n\n"
+                    + table + "\n")
+        print(f"# wrote {args.table_out}")
+
+    # gate: at the smallest all-hit margin, corp_prune must traverse ONCE
+    # and match the two-pass baseline functionally
+    print("name,us_per_call,derived")
+    for arch in SPEC_ARCHS:
+        margins = [r["margin"] for r in rows
+                   if r["arch"] == arch and r["hit_rate"] >= 1.0]
+        assert margins, f"{arch}: no margin reaches hit-rate 1.0 " \
+                        f"(sweep {SPEC_MARGINS})"
+        margin = min(margins)
+        cfg = reduced(get_config(arch)).replace(dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        stream = calib_stream(cfg, n_samples=args.batches * args.batch_size,
+                              batch=args.batch_size)
+        pc = PruneConfig(0.5, 0.5)
+        t0 = time.perf_counter()
+        p_two, c_two, r_two = corp_prune(model, params, stream, pc)
+        t_two = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        p_one, c_one, r_one = corp_prune(model, params, stream, pc,
+                                         one_traversal=True,
+                                         spec_margin=margin)
+        t_one = time.perf_counter() - t0
+        assert r_one["traversals"] == 1, (
+            f"{arch}: one-traversal hit path consumed "
+            f"{r_one['traversals']} traversals (misses: "
+            f"{r_one['speculative']['misses']})")
+        assert not r_one["speculative"]["misses"], r_one["speculative"]
+        assert c_two == c_one
+        # functional parity: the class-1 SVD fold is gauge-unique only up
+        # to paired singular-vector signs, so compare pruned-model outputs
+        m2 = build_model(c_two)
+        batch = next(iter(stream()))
+        y_two = m2.apply(p_two, batch)
+        y_one = m2.apply(p_one, batch)
+        y_two = y_two[0] if isinstance(y_two, tuple) else y_two
+        y_one = y_one[0] if isinstance(y_one, tuple) else y_one
+        np.testing.assert_allclose(np.asarray(y_two, np.float32),
+                                   np.asarray(y_one, np.float32),
+                                   rtol=1e-4, atol=1e-5)
+        print(f"calib_one_traversal_{arch},{t_one*1e6:.0f},"
+              f"margin={margin} traversals {r_two['traversals']}->1, "
+              f"two-pass {t_two:.2f}s vs {t_one:.2f}s")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deit-base")
     ap.add_argument("--batches", type=int, default=8)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--one-traversal", action="store_true",
+                    help="run the speculative one-traversal gates instead "
+                         "of the throughput/bf16/autotune gates: margin vs "
+                         "hit-rate table + traversals==1 on the hit path")
+    ap.add_argument("--table-out", default=None,
+                    help="with --one-traversal: also write the hit-rate "
+                         "markdown table to this path (uploaded by CI, "
+                         "cited by docs/pipeline.md)")
     args = ap.parse_args()
+    if args.one_traversal:
+        return one_traversal_gates(args)
 
     cfg = reduced(get_config(args.arch)).replace(dtype="float32")
     model = build_model(cfg)

@@ -18,7 +18,14 @@ claim holds. ``CalibrationEngine`` owns that hot path:
     any prefix of the stream is a valid checkpoint. Pass a
     ``repro.distrib.fault.CalibrationCheckpointer`` to make a long pass
     resumable (batches are deterministic-by-index; the restored batch
-    cursor skips what was already consumed);
+    cursor skips what was already consumed; saves run on a background
+    thread so the pass never blocks on disk);
+  * **one-traversal** — ``phase="1+2"`` accumulates pass-1 statistics AND
+    speculative pass-2 cross-moments (against fixed top-k candidate
+    keep-sets, ``spec_plan=``) from the *same* forward, so when the final
+    keep-sets land inside the candidates — the common case — CORP needs no
+    second traversal of the calibration set (``corp_prune(...,
+    one_traversal=True)``; design + margin policy in docs/pipeline.md);
   * **second moments through the Pallas gram kernel** — the per-unit
     ``X^T X`` reductions inside the step dispatch to
     ``repro.kernels.gram`` (streaming MXU kernel on TPU, zero-padded for
@@ -83,9 +90,18 @@ class CalibrationEngine:
     Args:
       model: model object exposing ``apply(params, batch, taps=...)``.
       units: prunable units whose statistics to gather (all in one forward).
-      phase: 1 (ranking/MLP moments + attention energies) or 2 (attention
-        compensation ridge inputs; requires ``plan``).
+      phase: 1 (ranking/MLP moments + attention energies), 2 (attention
+        compensation ridge inputs; requires ``plan``), or ``"1+2"``
+        (one-traversal mode: pass-1 statistics plus *speculative* pass-2
+        cross-moments against fixed candidate keep-sets; requires
+        ``spec_plan``). The ``"1+2"`` accumulator is
+        ``{"p1": <pass-1 tree>, "p2spec": <speculative tree>}`` — see
+        ``repro.core.stats.spec_pass2_reduce`` / ``spec_reconstruct`` and
+        docs/pipeline.md.
       plan: phase-2 only — ``{unit.name: (keep, prune)}`` index arrays.
+      spec_plan: phase-"1+2" only — ``{unit.name: (..., G, c) candidate
+        keep-indices}`` (``repro.core.ranking.candidate_attn``), fixed for
+        the whole traversal.
       donate: donate the accumulator's buffers to each step (in-place
         accumulation). Disable when the caller needs the pre-step
         accumulator to survive a failing step (see ``fail_hook``).
@@ -115,18 +131,23 @@ class CalibrationEngine:
         (None before, and always None unsharded).
     """
 
-    def __init__(self, model, units: List[Unit], *, phase: int = 1,
-                 plan: Optional[Dict] = None, donate: bool = True,
+    def __init__(self, model, units: List[Unit], *, phase=1,
+                 plan: Optional[Dict] = None,
+                 spec_plan: Optional[Dict] = None, donate: bool = True,
                  mesh=None, model_axis: str = "model",
                  stats_dtype="float32"):
-        assert phase in (1, 2), phase
-        assert phase == 1 or plan is not None, "phase 2 needs a keep/prune plan"
+        assert phase in (1, 2, "1+2"), phase
+        assert phase != 2 or plan is not None, "phase 2 needs a keep/prune plan"
+        assert phase != "1+2" or spec_plan is not None, \
+            'phase "1+2" needs a speculative candidate plan'
         self.model = model
         self.units = list(units)
         self.phase = phase
         self.stats_dtype = jnp.dtype(stats_dtype)
         self.plan = None if plan is None else {
             k: tuple(jnp.asarray(a) for a in v) for k, v in plan.items()}
+        self.spec_plan = None if spec_plan is None else {
+            k: jnp.asarray(v) for k, v in spec_plan.items()}
         if mesh is None:
             self.shard = None
         elif isinstance(mesh, dist_sharding.CalibSharding):
@@ -142,7 +163,14 @@ class CalibrationEngine:
             if phase == 1:
                 return stats_mod.pass1_reduce(taps, self.units, model.cfg,
                                               shard=self.shard)
-            return stats_mod.pass2_reduce(taps, self.units, self.plan)
+            if phase == 2:
+                return stats_mod.pass2_reduce(taps, self.units, self.plan)
+            # "1+2": both reductions from the SAME forward's taps — the
+            # one-traversal mode's whole point
+            return {"p1": stats_mod.pass1_reduce(taps, self.units, model.cfg,
+                                                 shard=self.shard),
+                    "p2spec": stats_mod.spec_pass2_reduce(
+                        taps, self.units, self.spec_plan)}
 
         def step(acc, params, batch):
             return jax.tree.map(jnp.add, acc, reduce_fn(params, batch))
@@ -160,13 +188,16 @@ class CalibrationEngine:
 
     def _fingerprint(self) -> str:
         """Identity of what this engine accumulates — phase, unit set,
-        (for pass 2) the exact keep/prune plan, and (when sharded) the mesh
-        layout. Stored with every stats checkpoint so a reused checkpoint
-        directory can never resume statistics gathered for a different
-        configuration — including a checkpoint written under a *different
-        mesh*, whose shard-local accumulation order (and donation layout)
-        this engine cannot reproduce — or under a different streaming
-        dtype, whose per-tap rounding differs."""
+        (for pass 2) the exact keep/prune plan, (for phase "1+2") the exact
+        speculative candidate sets, and (when sharded) the mesh layout.
+        Stored with every stats checkpoint so a reused checkpoint directory
+        can never resume statistics gathered for a different configuration
+        — including a checkpoint written under a *different mesh*, whose
+        shard-local accumulation order (and donation layout) this engine
+        cannot reproduce — or under a different streaming dtype, whose
+        per-tap rounding differs. Phase "1+2" hashes differently from both
+        1 and 2 (and per candidate set), so speculative checkpoints are
+        rejected by two-pass engines and vice versa."""
         h = hashlib.sha256()
         h.update(f"phase={self.phase};stats_dtype={self.stats_dtype}"
                  .encode())
@@ -177,6 +208,10 @@ class CalibrationEngine:
                 h.update(f";plan:{k}".encode())
                 for a in self.plan[k]:
                     h.update(np.asarray(a).tobytes())
+        if self.spec_plan is not None:
+            for k in sorted(self.spec_plan):
+                h.update(f";spec:{k}".encode())
+                h.update(np.asarray(self.spec_plan[k]).tobytes())
         if self.shard is not None:
             mesh = self.shard.mesh
             h.update(f";mesh={tuple(mesh.axis_names)}"
@@ -255,7 +290,9 @@ class CalibrationEngine:
           checkpointer: optional ``fault.CalibrationCheckpointer`` —
             restores the newest valid stats checkpoint (skipping the
             already-consumed stream prefix) and saves the accumulator every
-            N batches. Sharded accumulators are gathered on save and
+            N batches (on a background thread by default — the pass never
+            blocks on disk; ``run`` sync-flushes the in-flight save before
+            returning). Sharded accumulators are gathered on save and
             re-placed shard-by-shard on restore (see fault.py for the
             trade-off).
           fail_hook: optional ``hook(i)`` called before batch ``i``; if it
@@ -297,6 +334,10 @@ class CalibrationEngine:
                 checkpointer.maybe_save(acc, i + 1, self.fingerprint)
         if start == 0 and n_seen == 0:
             raise ValueError("every calibration batch failed")
+        if checkpointer is not None:
+            # sync-flush: the newest checkpoint is durably on disk before
+            # the pass reports completion (async saves run in background)
+            checkpointer.finish()
         return jax.device_get(acc)
 
 

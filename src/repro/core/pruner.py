@@ -12,6 +12,14 @@ a mesh the per-batch reductions compile to psums over the data axes
 (DESIGN.md §2.1), and the accumulator pytree can be checkpointed between
 batches (``ckpt_dir=`` — fault tolerance for long calibration passes, see
 repro.distrib.fault.CalibrationCheckpointer).
+
+``one_traversal=True`` fuses the two calibration passes into one: during
+pass 1 the engine speculatively accumulates pass-2 ridge statistics against
+top-k candidate keep-sets (sized ``keep_n * (1 + spec_margin)`` from the
+first batch's running scores); a final keep-set inside the candidates — the
+common case — reconstructs (G, h, t2) exactly with zero extra traversals,
+and the rare escape falls back to one targeted mini pass 2. Design, margin
+policy, memory bound, and hit-rate study: docs/pipeline.md.
 """
 from __future__ import annotations
 
@@ -48,6 +56,15 @@ def _keep_count(full: int, sparsity: float, round_to: int) -> int:
     return max(1, min(full, k))
 
 
+def _attn_keep_n(u: Unit, full: int, pc: PruneConfig) -> int:
+    """Kept dims (cls 1) / rotary pairs (cls 2/3) for an attention unit."""
+    rt = pc.round_to if u.attn_class == 1 else max(1, pc.round_to // 2)
+    return _keep_count(full, pc.attn_sparsity, rt)
+
+
+_ATTN_KINDS = ("attn", "mla", "cross")
+
+
 # ---------------------------------------------------------------------------
 # statistics accumulation
 # ---------------------------------------------------------------------------
@@ -71,6 +88,91 @@ def _checkpointer(ckpt_dir: Optional[str], tag: str, every: int):
         return None
     from repro.distrib.fault import CalibrationCheckpointer
     return CalibrationCheckpointer(f"{ckpt_dir}/{tag}", every=every)
+
+
+# ---------------------------------------------------------------------------
+# one-traversal speculative calibration (docs/pipeline.md)
+# ---------------------------------------------------------------------------
+
+def _speculative_pass(model, units, params, batches, pc: PruneConfig, *,
+                      spec_margin: float, mesh, stats_dtype,
+                      ckpt_dir=None, ckpt_every: int = 8):
+    """Single traversal gathering pass-1 AND speculative pass-2 statistics.
+
+    The candidate keep-sets are chosen from the *first batch's* ranking
+    scores (one extra forward of that batch — not an extra traversal of
+    the stream), sized ``keep_n * (1 + spec_margin)`` per unit; the fused
+    ``phase="1+2"`` engine then streams the whole set once. Returns
+    ``(p1, spec_plan, spec_stats)``.
+    """
+    import itertools as _it
+    it = iter(batches)
+    try:
+        first = next(it)
+    except StopIteration:
+        raise ValueError("empty calibration stream") from None
+    # the selector only needs the attention logit-energy scores — don't
+    # compute (and discard) every dense unit's FxF moments for one batch
+    attn_units = [u for u in units if u.kind in _ATTN_KINDS]
+    selector = calib_mod.CalibrationEngine(model, attn_units, phase=1,
+                                           mesh=mesh,
+                                           stats_dtype=stats_dtype)
+    s0 = selector.run(params, [first])
+    spec_plan = {}
+    for u in units:
+        if u.kind in _ATTN_KINDS:
+            full = s0[u.name]["rank"].shape[-1]
+            spec_plan[u.name] = rank_mod.candidate_attn(
+                s0[u.name], _attn_keep_n(u, full, pc), spec_margin)
+    engine = calib_mod.CalibrationEngine(model, units, phase="1+2",
+                                         spec_plan=spec_plan, mesh=mesh,
+                                         stats_dtype=stats_dtype)
+    combined = engine.run(params, _it.chain([first], it),
+                          checkpointer=_checkpointer(ckpt_dir, "pass12",
+                                                     ckpt_every))
+    return combined["p1"], spec_plan, combined["p2spec"]
+
+
+def _resolve_attn_pass2(model, units, params, calib_batches, attn_plan,
+                        spec_plan, spec_stats, *, mesh, stats_dtype,
+                        ckpt_dir=None, ckpt_every: int = 8, say=None):
+    """Pass-2 statistics for every unit in ``attn_plan``.
+
+    Speculative mode (``spec_plan`` not None): units whose final keep-set
+    fell inside their candidate set reconstruct (G, h, t2) from the
+    speculative accumulators — zero additional traversals; units that
+    escaped fall back to ONE targeted mini pass 2 reducing only their
+    statistics. Two-pass mode (``spec_plan`` None): the classic full
+    pass 2. Returns ``(p2, misses)``.
+    """
+    say = say or (lambda s: None)
+    p2, misses = {}, []
+    if spec_plan is not None:
+        for u in units:
+            if u.name not in attn_plan:
+                continue
+            keep = np.asarray(attn_plan[u.name][0])
+            if rank_mod.covers(spec_plan[u.name], keep):
+                p2[u.name] = stats_mod.spec_reconstruct(
+                    spec_stats[u.name], spec_plan[u.name], keep, u)
+            else:
+                misses.append(u.name)
+        todo = {k: attn_plan[k] for k in misses}
+        if todo:
+            say(f"pass 2 (targeted): {len(todo)} unit(s) escaped the "
+                f"speculative candidates")
+    else:
+        todo = attn_plan
+        if todo:
+            say("pass 2: attention compensation statistics")
+    if todo:
+        engine2 = calib_mod.CalibrationEngine(model, units, phase=2,
+                                              plan=todo, mesh=mesh,
+                                              stats_dtype=stats_dtype)
+        p2.update(engine2.run(params, calib_batches(),
+                              checkpointer=_checkpointer(ckpt_dir, "pass2",
+                                                         ckpt_every)))
+    return p2, misses
 
 
 # ---------------------------------------------------------------------------
@@ -423,34 +525,50 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
                pc: PruneConfig = PruneConfig(),
                progress: Optional[Callable[[str], None]] = None,
                ckpt_dir: Optional[str] = None, ckpt_every: int = 8,
-               mesh=None, stats_dtype="float32"):
+               mesh=None, stats_dtype="float32",
+               one_traversal: bool = False, spec_margin: float = 0.25):
     """One-shot CORP (Alg. 1): calibrate -> rank -> compensate -> fold.
 
     Args:
       model: model exposing ``apply(params, batch, taps=...)`` and ``cfg``.
       params: dense parameter pytree (any dtype; statistics are fp32).
       calib_batches: zero-arg callable returning a fresh iterator of
-        batches (the streaming pipeline is traversed twice: rank pass +
-        attention compensation pass).
+        batches (traversed twice classically: rank pass + attention
+        compensation pass; once with ``one_traversal=True`` on the
+        speculative hit path).
       pc: sparsities/ridge/ranking-policy knobs, see ``PruneConfig``.
       progress: optional ``fn(str)`` called at each pipeline stage.
       ckpt_dir: when set, each calibration pass checkpoints its statistics
         accumulator every ``ckpt_every`` batches under ``<ckpt_dir>/passN``
-        and resumes from the newest valid one (restartable long passes).
-      mesh: optional ``jax.sharding.Mesh`` — both calibration passes then
+        (``pass12`` for the fused one-traversal pass) and resumes from the
+        newest valid one (restartable long passes).
+      mesh: optional ``jax.sharding.Mesh`` — all calibration passes then
         run mesh-sharded (``CalibrationEngine(mesh=...)``): per-unit
         covariance/Gram blocks column-sharded over the model axis, batch
         contributions psum-reduced, no replicated full Sigma on any device.
         Ranking and folding still happen on host from the gathered sums.
-      stats_dtype: activation streaming dtype for both calibration passes
+      stats_dtype: activation streaming dtype for all calibration passes
         ("float32" default; "bfloat16" halves calibration HBM traffic,
         accumulators stay fp32 — see ``CalibrationEngine``).
+      one_traversal: fuse both passes into a single traversal of the
+        calibration set: pass 1 speculatively accumulates pass-2
+        cross-moments against top-k candidate keep-sets (sized
+        ``keep_n * (1 + spec_margin)`` from the first batch's running
+        scores). Attention units whose final keep-set lands inside the
+        candidates — the common case, see docs/pipeline.md's hit-rate
+        study — solve compensation with zero additional traversals; the
+        rest fall back to one targeted mini pass 2.
+      spec_margin: candidate safety margin for ``one_traversal`` (0.25
+        default — ``keep_n * margin`` extra candidate slots per group;
+        memory grows as ``(1+margin)^4`` for class-1 units).
 
     Returns:
       ``(pruned_params, pruned_config, report)`` — a physically smaller
       standard model (reduced d_ff / per-head qk dims) built by the same
       model code, its config, and per-unit distortion diagnostics + stage
-      timings.
+      timings. ``report["traversals"]`` counts calibration-set traversals;
+      with ``one_traversal=True``, ``report["speculative"]`` records the
+      margin, candidate sizes, and hit/miss units.
     """
     import copy
     import time
@@ -459,13 +577,31 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
     say = progress or (lambda s: None)
     report = {"timing": {}, "units": {}}
 
+    calls = [0]
+    _orig_batches = calib_batches
+
+    def calib_batches():            # noqa: F811 — counts traversals
+        calls[0] += 1
+        return _orig_batches()
+
+    speculate = (one_traversal and pc.attn_sparsity > 0
+                 and any(u.kind in _ATTN_KINDS for u in units))
+    spec_plan = spec_stats = None
     t0 = time.time()
-    say("pass 1: ranking/MLP statistics")
-    engine1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh,
-                                          stats_dtype=stats_dtype)
-    p1 = engine1.run(params, calib_batches(),
-                     checkpointer=_checkpointer(ckpt_dir, "pass1",
-                                                ckpt_every))
+    if speculate:
+        say("pass 1+2: one-traversal speculative statistics")
+        p1, spec_plan, spec_stats = _speculative_pass(
+            model, units, params, calib_batches(), pc,
+            spec_margin=spec_margin, mesh=mesh, stats_dtype=stats_dtype,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every)
+    else:
+        say("pass 1: ranking/MLP statistics")
+        engine1 = calib_mod.CalibrationEngine(model, units, phase=1,
+                                              mesh=mesh,
+                                              stats_dtype=stats_dtype)
+        p1 = engine1.run(params, calib_batches(),
+                         checkpointer=_checkpointer(ckpt_dir, "pass1",
+                                                    ckpt_every))
     report["timing"]["pass1"] = time.time() - t0
 
     # --- ranking ----------------------------------------------------------
@@ -489,29 +625,31 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
             keep, prune = rank_mod.rank_mlp(st, np.asarray(w2), keep_n,
                                             pc.rank_policy)
             plan[u.name] = (keep, prune)
-        elif u.kind in ("attn", "mla", "cross"):
+        elif u.kind in _ATTN_KINDS:
             if pc.attn_sparsity <= 0:
                 continue
             full = st["rank"].shape[-1]       # dims (cls1) or pairs (cls2/3)
-            rt = pc.round_to if u.attn_class == 1 else max(1, pc.round_to // 2)
-            keep_n = _keep_count(full, pc.attn_sparsity, rt)
-            keep, prune = rank_mod.rank_attn(st, keep_n)
+            keep, prune = rank_mod.rank_attn(st, _attn_keep_n(u, full, pc))
             plan[u.name] = (keep, prune)
     report["timing"]["rank"] = time.time() - t0
 
     # --- pass 2: attention compensation statistics -------------------------
     attn_plan = {u.name: plan[u.name] for u in units
-                 if u.kind in ("attn", "mla", "cross") and u.name in plan}
+                 if u.kind in _ATTN_KINDS and u.name in plan}
     p2 = {}
     if attn_plan:
         t0 = time.time()
-        say("pass 2: attention compensation statistics")
-        engine2 = calib_mod.CalibrationEngine(model, units, phase=2,
-                                              plan=attn_plan, mesh=mesh,
-                                              stats_dtype=stats_dtype)
-        p2 = engine2.run(params, calib_batches(),
-                         checkpointer=_checkpointer(ckpt_dir, "pass2",
-                                                    ckpt_every))
+        p2, misses = _resolve_attn_pass2(
+            model, units, params, calib_batches, attn_plan, spec_plan,
+            spec_stats, mesh=mesh, stats_dtype=stats_dtype,
+            ckpt_dir=ckpt_dir, ckpt_every=ckpt_every, say=say)
+        if speculate:
+            report["speculative"] = {
+                "margin": spec_margin,
+                "candidates": {k: int(v.shape[-1])
+                               for k, v in spec_plan.items()},
+                "hits": sorted(set(attn_plan) - set(misses)),
+                "misses": sorted(misses)}
         report["timing"]["pass2"] = time.time() - t0
 
     # --- fold -------------------------------------------------------------
@@ -543,6 +681,7 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
         set_block(new_params, u, block)
     report["timing"]["fold"] = time.time() - t0
     report["plan_sizes"] = {k: v[0].shape for k, v in plan.items()}
+    report["traversals"] = calls[0]
 
     new_cfg = cfg.pruned(pc.mlp_sparsity if pc.mlp_sparsity > 0 else 0.0,
                          pc.attn_sparsity if pc.attn_sparsity > 0 else 0.0,
@@ -556,7 +695,9 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                         pc: PruneConfig = PruneConfig(), *,
                         unit_group_size: int = 2,
                         progress: Optional[Callable[[str], None]] = None,
-                        mesh=None, stats_dtype="float32"):
+                        mesh=None, stats_dtype="float32",
+                        one_traversal: bool = False,
+                        spec_margin: float = 0.25):
     """Memory-bounded CORP: identical output to ``corp_prune`` (statistics
     are linear, so partitioning the unit set changes nothing), but only
     ``unit_group_size`` units' statistics are resident at a time.
@@ -579,10 +720,17 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
         ("float32" default; "bfloat16" halves calibration HBM traffic —
         composes with both bounds above, since it shrinks the *stream*
         while they bound the *resident statistics*).
+      one_traversal: speculative pass fusion per unit group — a group with
+        attention units traverses the calibration set once instead of
+        twice on the speculative hit path (see ``corp_prune``); the
+        candidate accumulators obey the same residency bound (they exist
+        only for the active group).
+      spec_margin: candidate safety margin, as in ``corp_prune``.
 
     Returns:
       ``(pruned_params, pruned_config, report)`` as ``corp_prune``, with
-      ``report['groups']`` counting processed unit groups.
+      ``report['groups']`` counting processed unit groups and
+      ``report['traversals']`` total calibration-set traversals.
     """
     import copy
     cfg = model.cfg
@@ -591,15 +739,33 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
     new_params = copy.deepcopy(jax.device_get(params))
     report = {"timing": {}, "units": {}, "groups": 0}
     merged_plan = {}
+    spec_report = {"margin": spec_margin, "candidates": {}, "hits": [],
+                   "misses": []}
+
+    calls = [0]
+    _orig_batches = calib_batches
+
+    def calib_batches():            # noqa: F811 — counts traversals
+        calls[0] += 1
+        return _orig_batches()
 
     groups = [all_units[i:i + unit_group_size]
               for i in range(0, len(all_units), unit_group_size)]
     for gi, units in enumerate(groups):
         say(f"group {gi+1}/{len(groups)}: "
             + ", ".join(u.name for u in units))
-        p1 = calib_mod.CalibrationEngine(model, units, phase=1, mesh=mesh,
-                                         stats_dtype=stats_dtype) \
-            .run(params, calib_batches())
+        speculate = (one_traversal and pc.attn_sparsity > 0
+                     and any(u.kind in _ATTN_KINDS for u in units))
+        spec_plan = spec_stats = None
+        if speculate:
+            p1, spec_plan, spec_stats = _speculative_pass(
+                model, units, params, calib_batches(), pc,
+                spec_margin=spec_margin, mesh=mesh, stats_dtype=stats_dtype)
+        else:
+            p1 = calib_mod.CalibrationEngine(model, units, phase=1,
+                                             mesh=mesh,
+                                             stats_dtype=stats_dtype) \
+                .run(params, calib_batches())
         plan = {}
         for u in units:
             st = p1[u.name]
@@ -617,21 +783,22 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                                      pc.mlp_sparsity, pc.round_to)
                 plan[u.name] = rank_mod.rank_mlp(st, np.asarray(w2), keep_n,
                                                  pc.rank_policy)
-            elif u.kind in ("attn", "mla", "cross") and pc.attn_sparsity > 0:
+            elif u.kind in _ATTN_KINDS and pc.attn_sparsity > 0:
                 full = st["rank"].shape[-1]
-                rt = pc.round_to if u.attn_class == 1 \
-                    else max(1, pc.round_to // 2)
-                keep_n = _keep_count(full, pc.attn_sparsity, rt)
-                plan[u.name] = rank_mod.rank_attn(st, keep_n)
+                plan[u.name] = rank_mod.rank_attn(
+                    st, _attn_keep_n(u, full, pc))
         attn_plan = {u.name: plan[u.name] for u in units
-                     if u.kind in ("attn", "mla", "cross")
-                     and u.name in plan}
+                     if u.kind in _ATTN_KINDS and u.name in plan}
         p2 = {}
         if attn_plan:
-            p2 = calib_mod.CalibrationEngine(model, units, phase=2,
-                                             plan=attn_plan, mesh=mesh,
-                                             stats_dtype=stats_dtype) \
-                .run(params, calib_batches())
+            p2, misses = _resolve_attn_pass2(
+                model, units, params, calib_batches, attn_plan, spec_plan,
+                spec_stats, mesh=mesh, stats_dtype=stats_dtype, say=say)
+            if speculate:
+                spec_report["candidates"].update(
+                    {k: int(v.shape[-1]) for k, v in spec_plan.items()})
+                spec_report["hits"] += sorted(set(attn_plan) - set(misses))
+                spec_report["misses"] += sorted(misses)
         for u in units:
             if u.name not in plan:
                 continue
@@ -662,4 +829,7 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
     if not pc.include_mamba and new_cfg.d_inner_kept is not None:
         new_cfg = new_cfg.replace(d_inner_kept=None)
     report["plan_sizes"] = {k: v[0].shape for k, v in merged_plan.items()}
+    report["traversals"] = calls[0]
+    if one_traversal and spec_report["candidates"]:
+        report["speculative"] = spec_report
     return new_params, new_cfg, report

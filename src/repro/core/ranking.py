@@ -52,3 +52,45 @@ def rank_mlp(stats, w2, keep_n: int, policy: str = "combined"):
 def rank_attn(stats, keep_n: int):
     """stats['rank']: (..., G, d or d/2 pairs) energy products."""
     return _select(np.asarray(stats["rank"], np.float64), keep_n)
+
+
+# ---------------------------------------------------------------------------
+# speculative candidate selection (one-traversal calibration)
+# ---------------------------------------------------------------------------
+
+def candidate_count(full: int, keep_n: int, margin: float) -> int:
+    """Candidate keep-set size for speculative pass-2 accumulation:
+    ``keep_n`` final slots plus a safety margin, clipped to the unit width.
+
+    The margin buys hit-rate: the final keep-set is chosen from the *full*
+    calibration set's ranking scores, while candidates are chosen from the
+    running scores of the stream prefix — the top-``keep_n`` sets differ
+    wherever scores are close, and the extra ``keep_n * margin`` slots
+    absorb that churn (docs/pipeline.md quantifies margin vs hit-rate)."""
+    assert margin >= 0.0, margin
+    c = int(np.ceil(keep_n * (1.0 + margin)))
+    return max(keep_n, min(full, c))
+
+
+def candidate_attn(stats, keep_n: int, margin: float) -> np.ndarray:
+    """Top-k candidate keep-set per kv group from *running* ranking scores.
+
+    stats['rank']: (..., G, d or pairs) energy sums accumulated so far
+    (any stream prefix — the scores only need to get the top-k set right,
+    not converged values). Returns sorted int32 candidate indices
+    (..., G, c) with ``c = candidate_count(full, keep_n, margin)``, a
+    superset-in-expectation of the final ``rank_attn`` keep-set."""
+    scores = np.asarray(stats["rank"], np.float64)
+    c = candidate_count(scores.shape[-1], keep_n, margin)
+    order = np.argsort(-scores, axis=-1, kind="stable")
+    return np.sort(order[..., :c], axis=-1).astype(np.int32)
+
+
+def covers(cand: np.ndarray, keep: np.ndarray) -> bool:
+    """True iff every group's final keep-set is inside its candidate set —
+    the speculative *hit* condition. cand: (..., G, c), keep: (..., G, n),
+    matching leading dims, both index arrays."""
+    c2 = np.asarray(cand).reshape(-1, cand.shape[-1])
+    k2 = np.asarray(keep).reshape(-1, keep.shape[-1])
+    assert c2.shape[0] == k2.shape[0], (cand.shape, keep.shape)
+    return all(bool(np.isin(k, c).all()) for c, k in zip(c2, k2))

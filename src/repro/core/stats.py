@@ -24,6 +24,27 @@ emits bf16 taps to halve calibration HBM traffic, and dense second moments
 carry that dtype into the gram kernel (fp32 VMEM accumulator, see
 docs/kernels.md for the tolerance study).
 
+One-traversal mode fuses both passes (``spec_pass2_reduce``): during pass 1
+the engine *speculatively* accumulates pass-2 cross-moments against a fixed
+top-k candidate keep-set per unit (chosen from running ranking scores with a
+safety margin). Because every pass-2 statistic is built from per-sample
+Gram blocks, the exact (G, h, t2) of ANY final keep-set that falls inside
+the candidates can be reconstructed after the single traversal
+(``spec_reconstruct``) — no second traversal. The identities:
+
+  class 1:  G_SS   = restriction of  sum_b A_CC (x) C_CC   (A = Q^T Q etc.)
+            h(S)   = [H_full - sum_{s in S} T_s]_SS, with
+                     H_full = sum_b (Q_C^T Q)(K^T K_C) and T_s a diagonal
+                     slice of the same candidate 4-tensor;
+            t2(S)  = t2_tot - 2 sum_S diag(H_full) + sum_SxS E_CC
+                     (inclusion-exclusion over P = complement(S))
+  class 2/3: the Hadamard analogues on E = (Q^H Q) (.) conj(K^H K), whose
+            candidate block doubles as both the ridge matrix and the
+            t2 correction terms.
+
+See docs/pipeline.md for the derivation, the margin policy, and the memory
+bound (the class-1 candidate 4-tensor costs (1+margin)^4 x the two-pass G).
+
 These are the reduction *definitions*; the streaming driver that fuses them
 into one donated-accumulator step per batch is
 ``repro.core.calibrate.CalibrationEngine`` (``make_stats_step`` +
@@ -268,6 +289,162 @@ def _p2_attn(taps, unit: Unit, keep, prune):
     if unit.stacked:
         return jax.vmap(one)(q, k, keep, prune)
     return one(q, k, keep, prune)
+
+
+# ---------------------------------------------------------------------------
+# speculative pass-2 reductions (one-traversal calibration)
+# ---------------------------------------------------------------------------
+
+def _bgram(x, y):
+    """Per-sample rectangular gram through the gram_cross kernel:
+    x (..., N, Fx), y (..., N, Fy) -> (..., Fx, Fy) fp32 ``X_b^T Y_b``.
+    Leading dims are flattened into one vmap axis; inputs keep their
+    streaming dtype (bf16 tiles cast fp32 inside the kernel)."""
+    lead = x.shape[:-2]
+    xf = x.reshape((-1,) + x.shape[-2:])
+    yf = y.reshape((-1,) + y.shape[-2:])
+    out = jax.vmap(lambda a, b: gram_ops.gram_cross(a, b)["s2"])(xf, yf)
+    return out.reshape(lead + out.shape[-2:])
+
+
+def _p2spec_attn(taps, unit: Unit, cand):
+    """Speculative pass-2 accumulators for one attention unit.
+
+    cand: int32 candidate keep-indices (..., G, c) — dims for class 1,
+    rotary pairs for classes 2/3 — fixed for the whole traversal. Per
+    (layer, group) the leaves are:
+
+      class 1:  Gc    (c, c, c, c)  sum_b A_CC (x) C_CC, order [i, l, j, k]
+                Hfull (c, c)        sum_b (Q_C^T Q)(K^T K_C)
+                t2_tot ()           sum_b <Q^T Q, K^T K>  (full Frobenius)
+      class 2/3: Gc   (c, c) cplx   candidate block of E = A (.) conj(C)
+                hfull (c,)   cplx   full row sums of E at candidate rows
+                t2_tot ()           Re sum E
+
+    Everything needed to reconstruct (G, h, t2) for any keep-set inside the
+    candidates falls out of these via ``spec_reconstruct`` — the class-1
+    per-keep outer products T_s and the t2 row/block corrections are
+    diagonal slices of Gc/Hfull, so no extra accumulators are stored. All
+    leaves accumulate fp32/complex64; dense grams route through the
+    gram_cross kernel with candidate-index gathers on the results.
+    """
+    qk = "q" if unit.kind != "cross" else "cross_q"
+    kk = "k" if unit.kind != "cross" else "cross_k"
+    q = taps[f"{unit.tap_prefix}/{qk}"]
+    k = taps[f"{unit.tap_prefix}/{kk}"]
+
+    def one(q, k, cand):
+        G = unit.n_groups
+        if unit.attn_class == 1:
+            # keep the streaming dtype: grams cast per tile in the kernel
+            qg = _group_q(q, G)                    # (B, G, TQ, d)
+            kg = k.transpose(0, 2, 1, 3)           # (B, G, T, d)
+
+            def per_group(qh, kh, C):
+                A_ff = _bgram(qh, qh)              # (B, d, d) fp32
+                C_ff = _bgram(kh, kh)
+                A_cc = jnp.take(jnp.take(A_ff, C, axis=-2), C, axis=-1)
+                C_cc = jnp.take(jnp.take(C_ff, C, axis=-2), C, axis=-1)
+                A_cf = jnp.take(A_ff, C, axis=-2)  # (B, c, d) = Q_C^T Q
+                C_fc = jnp.take(C_ff, C, axis=-1)  # (B, d, c) = K^T K_C
+                return {
+                    "Gc": jnp.einsum("bij,blk->iljk", A_cc, C_cc),
+                    "Hfull": jnp.einsum("bcp,bpu->cu", A_cf, C_fc),
+                    "t2_tot": jnp.einsum("bpq,bpq->", A_ff, C_ff)}
+            return jax.vmap(per_group, in_axes=(1, 1, 0))(qg, kg, cand)
+
+        # complex classes: rotary pairs, Hadamard reductions (fp32 cast
+        # before pairing — complex64 throughout)
+        q32 = q.astype(jnp.float32)
+        k32 = k.astype(jnp.float32)
+        qc = _to_complex_pairs(_group_q(q32, G))   # (B, G, TQ, dp)
+        kc = _to_complex_pairs(k32.transpose(0, 2, 1, 3))
+
+        def per_group(qh, kh, C):
+            A_ff = jnp.einsum("bts,btu->bsu", jnp.conj(qh), qh)
+            C_ff = jnp.einsum("bts,btu->bsu", jnp.conj(kh), kh)
+            E = A_ff * jnp.conj(C_ff)              # E_sp = A_sp conj(C_sp)
+            Ec = jnp.take(E, C, axis=-2)           # candidate rows
+            return {"Gc": jnp.sum(jnp.take(Ec, C, axis=-1), axis=0),
+                    "hfull": jnp.sum(Ec, axis=(0, 2)),
+                    "t2_tot": jnp.sum(jnp.real(E))}
+        return jax.vmap(per_group, in_axes=(1, 1, 0))(qc, kc, cand)
+
+    if unit.stacked:
+        return jax.vmap(one)(q, k, cand)
+    return one(q, k, cand)
+
+
+def spec_pass2_reduce(taps: Dict, units: List[Unit], spec_plan: Dict) -> Dict:
+    """Per-batch speculative pass-2 sums for every attention unit with a
+    candidate set in ``spec_plan`` ({unit.name: (..., G, c) indices})."""
+    out = {}
+    for u in units:
+        if u.kind in ("attn", "mla", "cross") and u.name in spec_plan:
+            out[u.name] = _p2spec_attn(taps, u, spec_plan[u.name])
+    return out
+
+
+def spec_reconstruct(spec, cand, keep, unit: Unit) -> Dict:
+    """Exact pass-2 statistics of ``keep`` from speculative accumulators.
+
+    Host-side (numpy, float64 intermediates): valid whenever every group's
+    keep-set is inside its candidate set (``ranking.covers``). Returns the
+    same ``{"G", "h", "t2"}`` pytree — shapes and dtypes — that a dedicated
+    ``pass2_reduce`` traversal would have produced for this unit, so the
+    attention fold consumes it unchanged. The only deviation from the
+    two-pass statistics is floating-point: the complement-set terms are
+    differences of candidate/full sums rather than direct sums over P
+    (docs/pipeline.md bounds the cancellation; ``t2`` is clamped at 0).
+    """
+    cls = unit.attn_class
+    cand = np.asarray(cand)
+    keep = np.asarray(keep)
+    lead = cand.shape[:-1]                  # (reps..., G)
+    c = cand.shape[-1]
+    n = keep.shape[-1]
+    cf = cand.reshape(-1, c)
+    kf = keep.reshape(-1, n)
+    rows = cf.shape[0]
+    Gs, hs, t2s = [], [], []
+    if cls == 1:
+        Gc = np.asarray(spec["Gc"], np.float64).reshape(rows, c, c, c, c)
+        Hf = np.asarray(spec["Hfull"], np.float64).reshape(rows, c, c)
+        tt = np.asarray(spec["t2_tot"], np.float64).reshape(rows)
+        for r in range(rows):
+            pos = np.searchsorted(cf[r], kf[r])
+            Gq = Gc[r]
+            Gs.append(Gq[np.ix_(pos, pos, pos, pos)].reshape(n * n, n * n))
+            # T_s = Gc[:, s, s, :] is the per-keep outer-product slice;
+            # subtracting it from H_full leaves the pruned-set cross term
+            sum_t = Gq[:, pos, pos, :].sum(axis=1)
+            hs.append((Hf[r] - sum_t)[np.ix_(pos, pos)].reshape(-1))
+            e_cc = np.einsum("iijj->ij", Gq)
+            t2 = tt[r] - 2.0 * np.diagonal(Hf[r])[pos].sum() \
+                + e_cc[np.ix_(pos, pos)].sum()
+            t2s.append(max(t2, 0.0))
+        out_dt = np.float32
+    else:
+        Gc = np.asarray(spec["Gc"], np.complex128).reshape(rows, c, c)
+        hf = np.asarray(spec["hfull"], np.complex128).reshape(rows, c)
+        tt = np.asarray(spec["t2_tot"], np.float64).reshape(rows)
+        for r in range(rows):
+            pos = np.searchsorted(cf[r], kf[r])
+            Gd = Gc[r][np.ix_(pos, pos)]
+            Gs.append(Gd)
+            hs.append(hf[r][pos] - Gd.sum(axis=1))
+            t2 = tt[r] - 2.0 * np.real(hf[r][pos].sum()) \
+                + np.real(Gd.sum())
+            t2s.append(max(t2, 0.0))
+        out_dt = np.complex64
+    G_arr = np.stack(Gs)
+    h_arr = np.stack(hs)
+    if cls == 3:                             # real restriction of class 2
+        G_arr, h_arr = np.real(G_arr), np.real(h_arr)
+        out_dt = np.float32
+    return {"G": G_arr.astype(out_dt).reshape(lead + G_arr.shape[1:]),
+            "h": h_arr.astype(out_dt).reshape(lead + h_arr.shape[1:]),
+            "t2": np.asarray(t2s, np.float32).reshape(lead)}
 
 
 # ---------------------------------------------------------------------------

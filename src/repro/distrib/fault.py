@@ -21,9 +21,10 @@ training job:
 2b. resumable calibration — the engine's accumulator is a plain pytree of
    linear sums, so any stream prefix is a valid checkpoint:
    ``CalibrationCheckpointer`` persists it every N batches (atomically, via
-   repro.checkpoint) and restores the newest valid one together with the
-   batch cursor. Calibration batches are deterministic-by-index, so a
-   restarted pass skips the consumed prefix and lands on identical
+   repro.checkpoint; serialized on a background thread by default so long
+   passes never block on disk) and restores the newest valid one together
+   with the batch cursor. Calibration batches are deterministic-by-index,
+   so a restarted pass skips the consumed prefix and lands on identical
    statistics.
 
 3. elastic re-mesh — ``remesh`` rebuilds the device mesh from the live
@@ -43,7 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import latest_step, restore_checkpoint
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint)
 
 log = logging.getLogger("repro.fault")
 
@@ -53,9 +55,24 @@ class CalibrationCheckpointer:
 
     Plugs into ``CalibrationEngine.run(..., checkpointer=...)``: the engine
     calls ``restore`` once (returning the newest valid accumulator and the
-    number of batches it already covers) and ``maybe_save`` after every
-    batch. Saves reuse repro.checkpoint's tmp-dir-rename protocol, so a
-    host dying mid-save can never corrupt the newest checkpoint.
+    number of batches it already covers), ``maybe_save`` after every batch,
+    and ``finish`` after the last one. Saves reuse repro.checkpoint's
+    tmp-dir-rename protocol, so a host dying mid-save can never corrupt the
+    newest checkpoint.
+
+    **Async cadence** (default): ``maybe_save`` snapshots the accumulator
+    to host (a synchronous ``device_get`` — cheap, and required anyway
+    before the engine donates the buffers to the next step) and hands the
+    serialization + atomic rename to ``checkpoint.AsyncCheckpointer``'s
+    background thread, so a long calibration pass never blocks on disk
+    between batches. At most one save is in flight (the next one joins the
+    previous first); ``finish`` sync-flushes so the newest checkpoint is
+    durable before the pass reports completion, and re-raises any write
+    error the background thread hit. A restart racing an in-flight save is
+    safe by construction: the tmp-dir-rename protocol means ``restore`` in
+    a new process only ever sees complete checkpoints (the interrupted save
+    is simply absent — tested in tests/test_one_traversal.py). Pass
+    ``async_save=False`` for strictly synchronous saves.
 
     Sharded accumulators (the engine's ``mesh=`` mode) are **gathered on
     save**: ``save_checkpoint`` device_gets the pytree, which assembles
@@ -72,10 +89,13 @@ class CalibrationCheckpointer:
     accumulation order differs and bitwise resume could not be guaranteed.
     """
 
-    def __init__(self, ckpt_dir: str, every: int = 8):
+    def __init__(self, ckpt_dir: str, every: int = 8,
+                 async_save: bool = True, keep: int = 3):
         assert every >= 1, "checkpoint interval must be >= 1 batch"
         self.ckpt_dir = ckpt_dir
         self.every = every
+        self._async = AsyncCheckpointer(ckpt_dir, keep=keep) \
+            if async_save else None
 
     def restore(self, like, fingerprint: str = "", shardings=None):
         """-> (accumulator, n_batches_consumed); (like, 0) when fresh.
@@ -96,6 +116,7 @@ class CalibrationCheckpointer:
         """
         import json
         import os
+        self.finish()          # never read under our own in-flight save
         last = latest_step(self.ckpt_dir)
         if last is None:
             return like, 0
@@ -121,10 +142,20 @@ class CalibrationCheckpointer:
     def maybe_save(self, acc, n_batches: int, fingerprint: str = "",
                    force: bool = False):
         if force or n_batches % self.every == 0:
-            from repro.checkpoint import save_checkpoint
-            save_checkpoint(self.ckpt_dir, n_batches, acc,
-                            extra={"n_batches": n_batches,
-                                   "fingerprint": fingerprint})
+            extra = {"n_batches": n_batches, "fingerprint": fingerprint}
+            if self._async is not None:
+                # snapshot-to-host now (safe against buffer donation),
+                # write + atomic rename on the background thread
+                self._async.save(n_batches, acc, extra)
+            else:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(self.ckpt_dir, n_batches, acc, extra)
+
+    def finish(self):
+        """Sync-flush: block until the in-flight background save (if any)
+        is durably on disk; re-raises its error. No-op in sync mode."""
+        if self._async is not None:
+            self._async.wait()
 
 
 def run_with_restarts(make_state, step_fn, *, ckpt_dir: str,

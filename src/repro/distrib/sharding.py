@@ -304,8 +304,9 @@ class CalibSharding(NamedTuple):
 
 
 # Stat leaves that stay replicated: scalar-ish bookkeeping whose size never
-# grows with the unit width (sample counts, pruned-tail energies).
-_REPLICATED_STATS = frozenset({"n", "t2"})
+# grows with the unit width (sample counts, pruned-tail energies, and the
+# one-traversal engine's per-group Frobenius totals).
+_REPLICATED_STATS = frozenset({"n", "t2", "t2_tot"})
 
 
 def stats_specs(stats, mesh, *, model_axis: str = "model"):
@@ -322,8 +323,10 @@ def stats_specs(stats, mesh, *, model_axis: str = "model"):
     Args:
       stats: statistics pytree (arrays or ``jax.eval_shape`` structs; only
         ``.shape``/``.ndim`` are inspected). Leaf *names* (the innermost
-        dict key: 's2', 's1', 'na', 'rank', 'G', 'h', 'n', 't2') choose the
-        rule.
+        dict key: 's2', 's1', 'na', 'rank', 'G', 'h', 'n', 't2', and the
+        speculative one-traversal leaves 'Gc', 'Hfull', 'hfull', 't2_tot')
+        choose the rule; unknown wide leaves get the default
+        trailing-dim-over-model treatment when divisible.
       mesh: a ``jax.sharding.Mesh`` — or a plain ``{axis: size}`` dict,
         which makes the rule testable without devices.
       model_axis: mesh axis name to shard over.

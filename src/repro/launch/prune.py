@@ -8,7 +8,9 @@ calibration stream, saves the pruned checkpoint + report. With --mesh the
 statistics passes run under a device mesh; adding --calib-sharded threads
 the mesh into the CalibrationEngine as an explicit sharding contract:
 per-unit covariance/Gram blocks column-sharded over the model axis, batch
-contributions psum-reduced, no replicated full Sigma on any device.
+contributions psum-reduced, no replicated full Sigma on any device. With
+--one-traversal the two calibration passes fuse into a single traversal of
+the calibration set (speculative pass-2 statistics, docs/pipeline.md).
 
 Every flag is documented in docs/cli.md with a worked end-to-end example.
 """
@@ -87,6 +89,20 @@ def main():
                          "pass resumes from the newest valid one)")
     ap.add_argument("--calib-ckpt-every", type=int, default=8,
                     help="batches between calibration checkpoints")
+    ap.add_argument("--one-traversal", action="store_true",
+                    help="fuse the two calibration passes into ONE "
+                         "traversal: pass 1 speculatively accumulates "
+                         "pass-2 ridge statistics for top-k candidate "
+                         "keep-sets; units whose final keep-set lands "
+                         "inside the candidates need no second pass "
+                         "(misses fall back to a targeted mini pass 2 — "
+                         "see docs/pipeline.md)")
+    ap.add_argument("--spec-margin", type=float, default=0.25,
+                    help="candidate safety margin for --one-traversal: "
+                         "keep_n * margin extra speculative slots per kv "
+                         "group (higher = better hit-rate, more "
+                         "accumulator memory — (1+margin)^4 for class-1 "
+                         "attention)")
     ap.add_argument("--stats-dtype", default="float32",
                     choices=["float32", "bfloat16"],
                     help="dtype activation taps are STREAMED in during "
@@ -137,7 +153,9 @@ def main():
     kw = dict(progress=print, ckpt_dir=args.calib_ckpt,
               ckpt_every=args.calib_ckpt_every,
               mesh=ctx if args.calib_sharded else None,
-              stats_dtype=args.stats_dtype)
+              stats_dtype=args.stats_dtype,
+              one_traversal=args.one_traversal,
+              spec_margin=args.spec_margin)
     if ctx is not None:
         with ctx:
             new_params, new_cfg, report = corp_prune(model, params, stream,
@@ -149,6 +167,13 @@ def main():
     print(f"[prune] done in {dt:.1f}s; "
           f"d_ff {cfg.d_ff} -> {new_cfg.eff_d_ff}, "
           f"qk {cfg.qk_full} -> {new_cfg.eff_qk}")
+    if "speculative" in report:
+        sp = report["speculative"]
+        print(f"[prune] one-traversal: {report['traversals']} traversal(s), "
+              f"margin {sp['margin']}, {len(sp['hits'])} hit / "
+              f"{len(sp['misses'])} miss"
+              + (f" (re-passed: {', '.join(sp['misses'])})"
+                 if sp["misses"] else ""))
 
     if args.out:
         save_checkpoint(args.out, 0, new_params,

@@ -24,9 +24,27 @@ def test_markdown_links_resolve():
 
 def test_readme_and_docs_exist():
     for rel in ("README.md", "docs/calibration.md", "docs/cli.md",
-                "docs/kernels.md", "docs/roofline.md",
+                "docs/kernels.md", "docs/roofline.md", "docs/pipeline.md",
                 "ROADMAP.md", "PAPER.md"):
         assert os.path.exists(os.path.join(ROOT, rel)), rel
+
+
+def test_readme_links_pipeline_doc():
+    """The one-traversal design doc must stay reachable from the README
+    (acceptance criterion of the speculative-calibration PR)."""
+    readme = open(os.path.join(ROOT, "README.md"), encoding="utf-8").read()
+    assert "docs/pipeline.md" in readme
+
+
+def test_pipeline_doc_carries_hit_rate_table():
+    """docs/pipeline.md must contain the margin-vs-hit-rate experiment
+    table (the columns bench_calibration.py --one-traversal emits) and
+    name the bench that regenerates it, so the numbers stay auditable."""
+    doc = open(os.path.join(ROOT, "docs", "pipeline.md"),
+               encoding="utf-8").read()
+    assert "| arch | margin | candidates/keep | hit-rate |" in doc
+    assert "--one-traversal" in doc
+    assert "bench_calibration.py" in doc
 
 
 def _prune_flags():
@@ -46,18 +64,42 @@ def test_cli_doc_covers_every_prune_flag():
     assert not missing, f"flags undocumented in docs/cli.md: {sorted(missing)}"
 
 
+def _table_flags(rel):
+    """`--flag` tokens in the first column of ``rel``'s markdown tables."""
+    documented = set()
+    for line in open(os.path.join(ROOT, rel), encoding="utf-8"):
+        if line.startswith("|"):
+            documented |= set(re.findall(r"`(--[a-z0-9-]+)`",
+                                         line.split("|")[1]))
+    return documented
+
+
 def test_cli_doc_has_no_stale_prune_flags():
     """The reverse direction: every `--flag` docs/cli.md's Flags table
     documents must still exist in launch/prune.py — catches renamed or
     removed flags leaving stale docs behind (the --rank-policy drift class
     fixed in PR 2)."""
     flags = _prune_flags()
-    doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8")
-    documented = set()
-    for line in doc:
-        if line.startswith("|"):
-            documented |= set(re.findall(r"`(--[a-z0-9-]+)`",
-                                         line.split("|")[1]))
+    documented = _table_flags("docs/cli.md")
     assert documented, "no flags parsed from docs/cli.md's table"
     stale = documented - flags
     assert not stale, f"docs/cli.md documents removed flags: {sorted(stale)}"
+
+
+def test_pipeline_doc_has_no_stale_prune_flags():
+    """Same stale-flag reverse check for docs/pipeline.md: any launch flag
+    its tables lead with must still exist in launch/prune.py, so the
+    one-traversal narrative can't drift from the CLI it describes."""
+    stale = _table_flags("docs/pipeline.md") - _prune_flags()
+    assert not stale, \
+        f"docs/pipeline.md documents removed flags: {sorted(stale)}"
+
+
+def test_one_traversal_flags_documented():
+    """The speculative-calibration flags must exist in the CLI and be
+    documented (belt-and-braces on top of the generic coverage check)."""
+    flags = _prune_flags()
+    assert {"--one-traversal", "--spec-margin"} <= flags
+    doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
+    for f in ("--one-traversal", "--spec-margin"):
+        assert f"`{f}`" in doc, f

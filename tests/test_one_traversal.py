@@ -1,0 +1,392 @@
+"""One-traversal speculative calibration (docs/pipeline.md).
+
+Covers the tentpole contract end to end:
+  * the speculative accumulators reconstruct EXACTLY the pass-2 ridge
+    statistics of any keep-set inside the candidates (real + complex
+    classes) — parity with a dedicated pass-2 traversal;
+  * corp_prune(one_traversal=True) consumes the calibration stream once on
+    the hit path and matches the two-pass baseline (functionally — the
+    class-1 SVD fold is gauge-unique only up to paired singular-vector
+    signs, so attention weights are compared through the model);
+  * a forced speculative miss (adversarial bottom-k candidates, margin 0)
+    falls back to the targeted mini pass 2 and still matches the oracle;
+  * phase-"1+2" checkpoints are rejected by two-pass engines and vice
+    versa (fingerprint separation);
+  * the async checkpoint cadence: background saves, sync-flush at pass
+    end, and an in-flight save surviving a simulated restart.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (CalibrationEngine, PruneConfig, corp_prune,
+                        corp_prune_streamed, discover_units)
+from repro.core import ranking as rank_mod
+from repro.core import stats as stats_mod
+from repro.core.ranking import candidate_attn, candidate_count, covers, \
+    rank_attn
+from repro.distrib.fault import CalibrationCheckpointer
+from repro.models import build_model
+
+from helpers import batch_for, calib_factory, out_of, tiny_cfg
+
+_ATTN = ("attn", "mla", "cross")
+
+#: class-1 attention fold leaves whose raw values are gauge-dependent
+#: (SVD sign pairs / rotary phase splits) — parity for them is asserted on
+#: model outputs instead
+_GAUGE_LEAVES = ("wq", "wk", "bq", "bk", "w_uq_nope", "w_uk_nope",
+                 "q_scale", "k_scale")
+
+
+def _leafname(kp):
+    return str(getattr(kp[-1], "key", getattr(kp[-1], "idx", kp[-1])))
+
+
+def _assert_params_match(ref, got, cfg_pruned, cfg, rtol=2e-4, atol=2e-5):
+    """Non-gauge leaves allclose; attention gauge leaves through outputs."""
+    flat_r = jax.tree_util.tree_flatten_with_path(ref)[0]
+    flat_g = jax.tree.leaves(got)
+    for (kp, a), b in zip(flat_r, flat_g):
+        if _leafname(kp) in _GAUGE_LEAVES:
+            continue
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=rtol, atol=atol, err_msg=str(kp))
+    m = build_model(cfg_pruned)
+    y_ref = out_of(m, ref, batch_for(cfg))
+    y_got = out_of(m, got, batch_for(cfg))
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_got, np.float32),
+                               rtol=1e-4, atol=1e-5)
+
+
+def _counted(factory):
+    calls = [0]
+
+    def make():
+        calls[0] += 1
+        return factory()
+    return make, calls
+
+
+# ---------------------------------------------------------------------------
+# speculative statistics == dedicated pass-2 statistics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deit-base", "granite-8b", "gemma3-1b"])
+def test_spec_reconstruction_matches_pass2(arch):
+    """For a keep-set inside the candidates, spec_reconstruct must equal
+    the dedicated pass-2 traversal's (G, h, t2) — class 1 (deit), rope
+    complex class 2 (granite), and rope+qk-norm class 3 (gemma3)."""
+    cfg = tiny_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    units = discover_units(cfg)
+    calib = calib_factory(cfg, n=3)
+    p1 = CalibrationEngine(model, units, phase=1).run(params, calib())
+    attn_units = [u for u in units if u.kind in _ATTN]
+    plan, spec_plan = {}, {}
+    for u in attn_units:
+        full = p1[u.name]["rank"].shape[-1]
+        keep_n = max(1, full // 2)
+        plan[u.name] = rank_attn(p1[u.name], keep_n)
+        # same stats for candidates and final ranking -> keep is inside the
+        # candidates by construction (top-n of top-c)
+        spec_plan[u.name] = candidate_attn(p1[u.name], keep_n, 0.5)
+        assert covers(spec_plan[u.name], plan[u.name][0])
+    combined = CalibrationEngine(model, units, phase="1+2",
+                                 spec_plan=spec_plan).run(params, calib())
+    p2 = CalibrationEngine(model, units, phase=2, plan=plan) \
+        .run(params, calib())
+    # the fused pass-1 side is the plain pass 1
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5),
+        p1, combined["p1"])
+    for u in attn_units:
+        rec = stats_mod.spec_reconstruct(combined["p2spec"][u.name],
+                                         spec_plan[u.name],
+                                         plan[u.name][0], u)
+        for k in ("G", "h", "t2"):
+            a = np.asarray(p2[u.name][k])
+            b = np.asarray(rec[k])
+            assert a.shape == b.shape and a.dtype == b.dtype, (k, a.dtype,
+                                                              b.dtype)
+            scale = max(float(np.max(np.abs(a))), 1e-12)
+            np.testing.assert_allclose(b, a, rtol=0, atol=2e-4 * scale,
+                                       err_msg=f"{u.name}/{k}")
+
+
+def test_candidate_count_policy():
+    assert candidate_count(16, 8, 0.0) == 8
+    assert candidate_count(16, 8, 0.25) == 10
+    assert candidate_count(16, 8, 1.0) == 16     # clipped to the unit
+    assert candidate_count(16, 8, 10.0) == 16
+    with pytest.raises(AssertionError):
+        candidate_count(16, 8, -0.1)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: hit path, miss path, zero-sparsity oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["deit-base", "granite-8b"])
+def test_one_traversal_hit_matches_two_pass(arch):
+    """Forced-hit margin (candidates = full width): exactly one traversal,
+    zero misses, pruned params match the two-pass oracle."""
+    cfg = tiny_cfg(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    calib = calib_factory(cfg, n=3)
+    pc = PruneConfig(0.5, 0.5)
+    p_ref, c_ref, _ = corp_prune(model, params, calib, pc)
+    counted, calls = _counted(calib)
+    p_one, c_one, rep = corp_prune(model, params, counted, pc,
+                                   one_traversal=True, spec_margin=1.0)
+    assert c_ref == c_one
+    assert rep["traversals"] == 1 and calls[0] == 1
+    assert rep["speculative"]["misses"] == []
+    assert rep["speculative"]["hits"]
+    _assert_params_match(p_ref, p_one, c_ref, cfg)
+
+
+def test_one_traversal_miss_falls_back(monkeypatch):
+    """Adversarial candidates (bottom-k scores, margin 0) force a miss:
+    the targeted re-pass must reproduce the two-pass oracle, costing
+    exactly one extra traversal."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(4))
+    calib = calib_factory(cfg, n=3)
+    pc = PruneConfig(0.5, 0.5)
+    p_ref, c_ref, _ = corp_prune(model, params, calib, pc)
+
+    orig = rank_mod.candidate_attn
+
+    def adversarial(stats, keep_n, margin):
+        flipped = {"rank": -np.asarray(stats["rank"], np.float64)}
+        return orig(flipped, keep_n, 0.0)
+    monkeypatch.setattr(rank_mod, "candidate_attn", adversarial)
+
+    counted, calls = _counted(calib)
+    p_one, c_one, rep = corp_prune(model, params, counted, pc,
+                                   one_traversal=True)
+    assert c_ref == c_one
+    assert rep["speculative"]["misses"], rep["speculative"]
+    assert rep["traversals"] == 2 and calls[0] == 2
+    _assert_params_match(p_ref, p_one, c_ref, cfg)
+
+
+def test_one_traversal_zero_sparsity_bitwise():
+    """The zero-sparsity oracle must hold under one_traversal: nothing to
+    speculate on (no unit enters the plan), params bitwise identical."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    new_p, new_c, rep = corp_prune(model, params, calib_factory(cfg, n=2),
+                                   PruneConfig(0.0, 0.0),
+                                   one_traversal=True)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert rep["traversals"] == 1
+    assert "speculative" not in rep      # attn_sparsity 0 -> no speculation
+
+
+def test_one_traversal_streamed_and_bf16():
+    """Composition: corp_prune_streamed(one_traversal=True) saves the
+    per-group second traversal, and bf16 streaming rides along."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(6))
+    calib = calib_factory(cfg, n=3)
+    pc = PruneConfig(0.5, 0.5)
+    counted_ref, calls_ref = _counted(calib)
+    p_ref, c_ref, _ = corp_prune_streamed(model, params, counted_ref, pc,
+                                          unit_group_size=1)
+    counted_one, calls_one = _counted(calib)
+    p_one, c_one, rep = corp_prune_streamed(model, params, counted_one, pc,
+                                            unit_group_size=1,
+                                            one_traversal=True,
+                                            spec_margin=1.0)
+    assert c_ref == c_one
+    assert rep["speculative"]["misses"] == []
+    assert rep["traversals"] == calls_one[0] < calls_ref[0]
+    _assert_params_match(p_ref, p_one, c_ref, cfg)
+
+    # bf16 composes: same pipeline, looser tolerance (documented bf16 tol)
+    p_bf, c_bf, rep_bf = corp_prune(model, params, calib, pc,
+                                    one_traversal=True, spec_margin=1.0,
+                                    stats_dtype="bfloat16")
+    assert c_bf == c_ref and rep_bf["traversals"] == 1
+    m = build_model(c_ref)
+    y_ref = out_of(m, p_ref, batch_for(cfg))
+    y_bf = out_of(m, p_bf, batch_for(cfg))
+    np.testing.assert_allclose(np.asarray(y_ref, np.float32),
+                               np.asarray(y_bf, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# fingerprint separation + checkpoint rejection
+# ---------------------------------------------------------------------------
+
+def test_spec_fingerprint_separation(tmp_path):
+    """Speculative checkpoints must be rejected by two-pass engines and
+    vice versa — phases 1, 2 and "1+2" all hash apart, and "1+2" re-hashes
+    per candidate set."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(7))
+    units = discover_units(cfg)
+    calib = calib_factory(cfg, n=3)
+    p1 = CalibrationEngine(model, units, phase=1).run(params, calib())
+    attn = [u for u in units if u.kind in _ATTN][0]
+    full = p1[attn.name]["rank"].shape[-1]
+    keep_n = max(1, full // 2)
+    plan = {attn.name: rank_attn(p1[attn.name], keep_n)}
+    cand_a = {attn.name: candidate_attn(p1[attn.name], keep_n, 0.25)}
+    cand_b = {attn.name: candidate_attn(p1[attn.name], keep_n, 0.5)}
+
+    e1 = CalibrationEngine(model, units, phase=1)
+    e2 = CalibrationEngine(model, units, phase=2, plan=plan)
+    e12a = CalibrationEngine(model, units, phase="1+2", spec_plan=cand_a)
+    e12b = CalibrationEngine(model, units, phase="1+2", spec_plan=cand_b)
+    fps = [e1.fingerprint, e2.fingerprint, e12a.fingerprint,
+           e12b.fingerprint]
+    assert len(set(fps)) == 4, fps
+
+    # a speculative checkpoint in a reused dir must NOT resume a phase-1
+    # pass (fresh start, identical to a clean run) ...
+    ckdir = str(tmp_path / "reused")
+    e12a.run(params, calib(),
+             checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    out = e1.run(params, calib(),
+                 checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    ref = e1.run(params, calib())
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6), out, ref)
+    # ... and the phase-1 checkpoint that run just wrote must not resume a
+    # speculative pass either
+    out12 = e12a.run(params, calib(),
+                     checkpointer=CalibrationCheckpointer(
+                         str(tmp_path / "reused2"), every=1))
+    ref12 = e12a.run(params, calib())
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6), out12, ref12)
+
+
+def test_one_traversal_ckpt_resume(tmp_path):
+    """ckpt_dir threads through the fused pass (tag pass12): an
+    interrupted one-traversal pass resumes into identical pruned params."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(8))
+    calib = calib_factory(cfg, n=4)
+    pc = PruneConfig(0.5, 0.5)
+    ckdir = str(tmp_path / "prune")
+    p_a, c_a, _ = corp_prune(model, params, calib, pc, one_traversal=True,
+                             spec_margin=1.0, ckpt_dir=ckdir, ckpt_every=1)
+    assert (tmp_path / "prune" / "pass12").exists()
+    p_b, c_b, _ = corp_prune(model, params, calib, pc, one_traversal=True,
+                             spec_margin=1.0, ckpt_dir=ckdir, ckpt_every=1)
+    assert c_a == c_b
+    _assert_params_match(p_a, p_b, c_a, cfg, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# async checkpoint cadence
+# ---------------------------------------------------------------------------
+
+def test_async_checkpoint_resume_matches_uninterrupted(tmp_path):
+    """The default (async) cadence must reproduce the sync semantics:
+    interrupt after 2 of 4 batches, resume, land on identical sums."""
+    cfg = tiny_cfg("deit-base")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(9))
+    calib = calib_factory(cfg, n=4)
+    units = discover_units(cfg)
+    eng = CalibrationEngine(model, units, phase=1)
+    ref = eng.run(params, calib())
+    ckdir = str(tmp_path / "calib")
+    eng.run(params, itertools.islice(calib(), 2),
+            checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    resumed = eng.run(params, calib(),
+                      checkpointer=CalibrationCheckpointer(ckdir, every=1))
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6), resumed, ref)
+
+
+def test_async_save_does_not_block_and_flushes(tmp_path, monkeypatch):
+    """maybe_save must return before the write lands (background thread);
+    finish() must block until it is durable."""
+    from repro.checkpoint import ckpt as ckpt_mod
+    from repro.checkpoint import latest_step
+
+    gate = threading.Event()
+    real_save = ckpt_mod.save_checkpoint
+
+    def slow_save(*a, **kw):
+        gate.wait(timeout=10)
+        return real_save(*a, **kw)
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", slow_save)
+
+    ck = CalibrationCheckpointer(str(tmp_path / "c"), every=1)
+    acc = {"s": np.arange(4, dtype=np.float32)}
+    t0 = time.perf_counter()
+    ck.maybe_save(acc, 1, "fp")
+    assert time.perf_counter() - t0 < 5.0       # returned while gated
+    assert latest_step(str(tmp_path / "c")) is None   # not on disk yet
+    gate.set()
+    ck.finish()
+    assert latest_step(str(tmp_path / "c")) == 1
+
+
+def test_async_inflight_save_survives_restart(tmp_path, monkeypatch):
+    """A restart racing an in-flight save must only ever see complete
+    checkpoints: the older valid step while the save is in flight, the new
+    step once it lands — never corruption."""
+    from repro.checkpoint import ckpt as ckpt_mod
+
+    ckdir = str(tmp_path / "c")
+    like = {"s": np.zeros(4, np.float32)}
+    # step 1 lands normally
+    ck = CalibrationCheckpointer(ckdir, every=1)
+    ck.maybe_save({"s": np.full(4, 1.0, np.float32)}, 1, "fp")
+    ck.finish()
+
+    # step 2's write is held in flight
+    gate = threading.Event()
+    real_save = ckpt_mod.save_checkpoint
+
+    def slow_save(*a, **kw):
+        gate.wait(timeout=10)
+        return real_save(*a, **kw)
+    monkeypatch.setattr(ckpt_mod, "save_checkpoint", slow_save)
+    ck.maybe_save({"s": np.full(4, 2.0, np.float32)}, 2, "fp")
+
+    # simulated restart: a NEW checkpointer (new process, in spirit) sees
+    # the newest COMPLETE checkpoint — step 1
+    acc, start = CalibrationCheckpointer(ckdir, every=1).restore(like, "fp")
+    assert start == 1 and float(acc["s"][0]) == 1.0
+
+    # the in-flight save completes -> the next restart resumes step 2
+    gate.set()
+    ck.finish()
+    acc, start = CalibrationCheckpointer(ckdir, every=1).restore(like, "fp")
+    assert start == 2 and float(acc["s"][0]) == 2.0
+
+
+def test_sync_mode_still_available(tmp_path):
+    """async_save=False preserves the strictly synchronous cadence."""
+    ck = CalibrationCheckpointer(str(tmp_path / "c"), every=1,
+                                 async_save=False)
+    from repro.checkpoint import latest_step
+    ck.maybe_save({"s": np.ones(2, np.float32)}, 1, "fp")
+    assert latest_step(str(tmp_path / "c")) == 1    # landed synchronously
+    ck.finish()                                      # no-op

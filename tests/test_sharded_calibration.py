@@ -185,3 +185,37 @@ np.testing.assert_allclose(y_ref, y_st, rtol=2e-3, atol=2e-3)
 print("OK")
 """)
     assert "OK" in out
+
+
+def test_sharded_one_traversal_functional_parity():
+    """Composition (docs/pipeline.md): the phase-"1+2" speculative engine
+    under a mesh — candidate accumulators take stats_specs shardings, the
+    hit path consumes the stream once, and corp_prune(mesh=...,
+    one_traversal=True) matches the single-device two-pass pipeline
+    functionally."""
+    out = run_py("""
+import jax, numpy as np
+from repro.core import PruneConfig, corp_prune
+from repro.models import build_model
+from repro.launch.mesh import make_mesh
+from helpers import tiny_cfg, calib_factory, batch_for, out_of
+
+mesh = make_mesh((2, 2))
+cfg = tiny_cfg("deit-base")
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(11))
+calib = calib_factory(cfg, n=4)
+pc = PruneConfig(0.5, 0.5)
+p_ref, c_ref, _ = corp_prune(model, params, calib, pc)
+p_one, c_one, rep = corp_prune(model, params, calib, pc, mesh=mesh,
+                               one_traversal=True, spec_margin=1.0)
+assert c_ref == c_one
+assert rep["traversals"] == 1, rep["traversals"]
+assert rep["speculative"]["misses"] == []
+b = batch_for(cfg)
+y_ref = np.asarray(out_of(build_model(c_ref), p_ref, b))
+y_one = np.asarray(out_of(build_model(c_one), p_one, b))
+np.testing.assert_allclose(y_ref, y_one, rtol=2e-3, atol=2e-3)
+print("OK")
+""")
+    assert "OK" in out
