@@ -1,10 +1,18 @@
-"""Batched serving driver (prefill + decode loop) for dense or pruned models.
+"""Serving driver: fixed-batch baseline loop + continuous-batching engine.
+
+Fixed-batch (the pre-engine baseline, kept for comparison):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b-reduced \
         --batch 4 --prompt-len 32 --gen 16
 
-Reports prefill latency and decode throughput; with --ckpt-in it serves a
-pruned checkpoint produced by repro.launch.prune (pass --sparsity to match).
+Continuous batching over a synthetic ragged arrival trace (reports p50/p99
+per-request latency and aggregate tok/s — see docs/serving.md):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b-reduced \
+        --trace 24 --slots 4 --max-len 128 --compare-static
+
+With --ckpt-in it serves a pruned checkpoint produced by repro.launch.prune
+(pass --sparsity to match); pruned configs shrink the KV cache automatically.
 """
 from __future__ import annotations
 
@@ -22,6 +30,10 @@ from repro.models import build_model
 
 def serve_loop(model, params, *, batch, prompt_len, gen, max_len,
                seed=0, log=print):
+    """Fixed-batch prefill + greedy decode; returns exactly ``gen`` tokens
+    per request: the prefill argmax plus ``gen - 1`` decode steps, each of
+    which is inside the timed region (the old loop ran one extra decode step
+    whose token was discarded, so the stream was shifted off the timing)."""
     cfg = model.cfg
     rng = np.random.RandomState(seed)
     toks = jnp.asarray(rng.randint(0, cfg.vocab_size,
@@ -34,10 +46,13 @@ def serve_loop(model, params, *, batch, prompt_len, gen, max_len,
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len))
     decode = jax.jit(model.decode_step)
 
+    def argmax(logits):
+        return jnp.argmax(logits[:, -1, : cfg.vocab_size],
+                          axis=-1)[:, None].astype(jnp.int32)
+
     # warm up (compile) outside the timed region
     logits, cache = prefill(params, req)
-    tok0 = jnp.zeros((batch, 1), jnp.int32)
-    _l, _c = decode(params, tok0, cache)
+    _l, _c = decode(params, argmax(logits), cache)
     jax.block_until_ready(_l)
 
     t0 = time.time()
@@ -45,22 +60,57 @@ def serve_loop(model, params, *, batch, prompt_len, gen, max_len,
     jax.block_until_ready(logits)
     t_prefill = time.time() - t0
 
-    out_tokens = []
-    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None] \
-        .astype(jnp.int32)
+    tok = argmax(logits)          # first generated token (from prefill)
+    out_tokens = [tok]
     t0 = time.time()
-    for _ in range(gen):
-        out_tokens.append(tok)
+    for _ in range(gen - 1):
         logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None] \
-            .astype(jnp.int32)
+        tok = argmax(logits)
+        out_tokens.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.time() - t0
+    steps = gen - 1
     log(f"[serve] prefill {t_prefill*1e3:.1f} ms "
         f"({batch}x{prompt_len} tokens); decode "
-        f"{gen} steps in {t_decode*1e3:.1f} ms -> "
-        f"{batch*gen/max(t_decode,1e-9):.1f} tok/s")
+        f"{steps} steps in {t_decode*1e3:.1f} ms -> "
+        f"{batch*steps/max(t_decode,1e-9):.1f} tok/s")
     return jnp.concatenate(out_tokens, axis=1), t_prefill, t_decode
+
+
+def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
+                rate=None, seed=0, compare_static=False, log=print):
+    """Continuous-batching engine over a synthetic ragged trace."""
+    from repro.serve import (ServeEngine, percentile_table, run_static_trace,
+                             synthetic_trace)
+    from repro.serve.engine import format_table
+    cfg = model.cfg
+    trace = synthetic_trace(n, cfg.vocab_size, seed=seed,
+                            prompt_range=prompt_range, gen_range=gen_range,
+                            rate=rate)
+    eng = ServeEngine(model, params, n_slots=slots, max_len=max_len)
+    eng.warmup(prompt_lens=[len(r.tokens) for r in trace])
+    t0 = time.perf_counter()
+    comps = eng.run(trace)
+    wall = time.perf_counter() - t0
+    table = percentile_table(comps, wall)
+    table["mode"] = "continuous"
+    rows = [table]
+    log(f"[serve] continuous: {eng.stats['admits']} admits, "
+        f"{eng.stats['decode_steps']} decode steps, "
+        f"lane utilization "
+        f"{eng.stats['decode_lanes'] / max(1, eng.stats['decode_steps'] * slots):.0%}, "
+        f"cache {eng.cache_bytes / 1e6:.2f} MB")
+    if compare_static:
+        # run_static_trace compile-warms internally; time from its clock
+        comps_s = run_static_trace(model, params, trace, n_slots=slots,
+                                   max_len=max_len)
+        ts = percentile_table(comps_s, max(c.t_done for c in comps_s))
+        ts["mode"] = "static"
+        rows.append(ts)
+    keys = ["mode", "requests", "tokens", "tok_per_s", "lat_p50_ms",
+            "lat_p99_ms", "ttft_p50_ms", "ttft_p99_ms"]
+    log(format_table(rows, keys))
+    return comps, table
 
 
 def main():
@@ -71,6 +121,24 @@ def main():
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sparsity", type=float, default=0.0)
     ap.add_argument("--ckpt-in", default=None)
+    ap.add_argument("--trace", type=int, default=0,
+                    help="serve N synthetic ragged requests through the "
+                         "continuous-batching engine instead of the "
+                         "fixed-batch loop")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="engine slots (concurrent requests)")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="per-slot sequence budget (prompt + gen)")
+    ap.add_argument("--prompt-range", default="8,48",
+                    help="trace prompt lengths, 'lo,hi'")
+    ap.add_argument("--gen-range", default="4,48",
+                    help="trace generation lengths, 'lo,hi'")
+    ap.add_argument("--rate", type=float, default=None,
+                    help="trace arrival rate (req/s); default all at t=0")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compare-static", action="store_true",
+                    help="also run the fixed-batch baseline on the same "
+                         "trace and print both rows")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch)
@@ -82,8 +150,17 @@ def main():
         last = latest_step(args.ckpt_in)
         params, _ = restore_checkpoint(args.ckpt_in, last, params)
         print(f"[serve] loaded {args.ckpt_in} step {last}")
-    serve_loop(model, params, batch=args.batch, prompt_len=args.prompt_len,
-               gen=args.gen, max_len=args.prompt_len + args.gen + 1)
+    if args.trace > 0:
+        pr = tuple(int(x) for x in args.prompt_range.split(","))
+        gr = tuple(int(x) for x in args.gen_range.split(","))
+        serve_trace(model, params, n=args.trace, slots=args.slots,
+                    max_len=args.max_len, prompt_range=pr, gen_range=gr,
+                    rate=args.rate, seed=args.seed,
+                    compare_static=args.compare_static)
+    else:
+        serve_loop(model, params, batch=args.batch,
+                   prompt_len=args.prompt_len, gen=args.gen,
+                   max_len=args.prompt_len + args.gen + 1)
 
 
 if __name__ == "__main__":

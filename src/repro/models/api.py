@@ -4,7 +4,8 @@
   init(key)                          -> params
   apply(params, batch, taps=None)    -> model outputs (family-specific)
   loss(params, batch)                -> scalar loss (train objective)
-  prefill(params, batch, max_len)    -> (logits, cache)
+  prefill(params, batch, max_len[, lengths]) -> (logits, cache)
+                                        (lengths: ragged right-padded prompts)
   decode_step(params, token, cache)  -> (logits, cache)
   init_cache(batch, max_len)         -> empty cache (decode-only dry-runs)
 
@@ -49,9 +50,10 @@ def build_model(cfg: ModelConfig) -> Model:
                                    patch_embeds=batch.get("patch_embeds"),
                                    train=train)
 
-        def prefill_fn(params, batch, max_len):
+        def prefill_fn(params, batch, max_len, lengths=None):
             return lm_mod.lm_prefill(params, batch["tokens"], cfg, max_len,
-                                     patch_embeds=batch.get("patch_embeds"))
+                                     patch_embeds=batch.get("patch_embeds"),
+                                     lengths=lengths)
 
         return Model(
             cfg=cfg,
@@ -88,9 +90,10 @@ def build_model(cfg: ModelConfig) -> Model:
             apply=e_apply,
             loss=lambda params, batch, train=True:
                 encdec_mod.encdec_loss(params, batch, cfg, train=train),
-            prefill=lambda params, batch, max_len:
+            prefill=lambda params, batch, max_len, lengths=None:
                 encdec_mod.encdec_prefill(params, batch["frames"],
-                                          batch["tokens"], cfg, max_len),
+                                          batch["tokens"], cfg, max_len,
+                                          lengths=lengths),
             decode_step=lambda params, token, cache:
                 encdec_mod.encdec_decode_step(params, token, cache, cfg),
         )

@@ -116,8 +116,15 @@ def encdec_loss(params, batch, cfg, *, train=True):
 # serving
 # ---------------------------------------------------------------------------
 
-def encdec_prefill(params, frames, tokens, cfg, max_len: int):
-    """Encode + teacher-forced decoder prefill. Returns (logits, cache)."""
+def encdec_prefill(params, frames, tokens, cfg, max_len: int, lengths=None):
+    """Encode + teacher-forced decoder prefill. Returns (logits, cache).
+
+    ``lengths`` (B,) enables ragged decoder prompts (right-padded tokens):
+    causal self-attention keeps decoder cache rows < lengths exact, and
+    cross-attention/MLP are per-position, so only the logits gather and the
+    cache ``pos`` need the true length. ``frames`` must be unpadded — the
+    encoder memory is attended in full.
+    """
     from repro.models import attention as attn_mod
     from repro.models import lm as lm_mod
     mem = encode(params, frames, cfg)
@@ -149,9 +156,16 @@ def encdec_prefill(params, frames, tokens, cfg, max_len: int):
         return x, c
 
     x, cache_stack = jax.lax.scan(body, x, p_stack)
-    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
-    return x @ params["head"], {"dec": cache_stack,
-                                "pos": jnp.full((B,), T, jnp.int32)}
+    if lengths is None:
+        x_last = x[:, -1:]
+        pos = jnp.full((B,), T, jnp.int32)
+    else:
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+        cache_stack = lm_mod.override_cache_pos(cache_stack, lengths)
+        pos = lengths.astype(jnp.int32)
+    x = apply_norm(params["final_norm"], x_last, cfg)
+    return x @ params["head"], {"dec": cache_stack, "pos": pos}
 
 
 def encdec_decode_step(params, token, cache, cfg):

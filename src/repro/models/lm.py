@@ -245,19 +245,31 @@ def lm_decode_step(params, token, cache, cfg):
     return x @ head, new_cache
 
 
-def lm_prefill(params, tokens, cfg, max_len: int, patch_embeds=None):
+def lm_prefill(params, tokens, cfg, max_len: int, patch_embeds=None,
+               lengths=None):
     """Prefill: full forward returning (last-token logits, populated cache).
 
     Implemented as full-sequence attention + cache writeback per layer; for
     the dry-run shapes this is the cheapest correct formulation (one pass).
+
+    ``lengths`` (B,) int32 enables *ragged* prefill on right-padded token
+    batches: logits are gathered at position ``lengths-1`` per sample and
+    every cache ``pos`` is set to ``lengths``, so padded tail positions are
+    never read back (causality keeps rows < lengths exact). Only valid for
+    pure global-attention stacks — sliding-window ring buffers and recurrent
+    (mamba/rwkv) states are contaminated by pad tokens.
     """
+    if lengths is not None and set(cfg.layer_kinds) != {"attn"}:
+        raise ValueError("ragged prefill (lengths=) requires a pure "
+                         f"global-attention stack, got {set(cfg.layer_kinds)}")
     B, T = tokens.shape
     x = params["embed"][tokens]
     if patch_embeds is not None:
         x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
         T = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
-    cache = {"pos": jnp.full((B,), T, jnp.int32)}
+    cache = {"pos": jnp.full((B,), T, jnp.int32) if lengths is None
+             else lengths.astype(jnp.int32)}
     # sequence-parallel residual (§Perf iteration D1): turns the row-parallel
     # output-projection all-reduces into reduce-scatter/all-gather pairs and
     # keeps every (B,T,D) buffer sequence-sharded
@@ -314,11 +326,32 @@ def lm_prefill(params, tokens, cfg, max_len: int, patch_embeds=None):
 
             x, cs = jax.lax.scan(body, x, params[name])
             cache[name] = cs
-    x = apply_norm(params["final_norm"], x[:, -1:], cfg)
+    if lengths is None:
+        x_last = x[:, -1:]
+    else:
+        idx = (lengths.astype(jnp.int32) - 1)[:, None, None]
+        x_last = jnp.take_along_axis(x, idx, axis=1)
+        cache = override_cache_pos(cache, lengths)
+    x = apply_norm(params["final_norm"], x_last, cfg)
     head = params.get("head")
     if head is None:
         head = params["embed"].T
     return x @ head, cache
+
+
+def override_cache_pos(tree, lengths):
+    """Set every ``pos`` leaf of a prefill cache to per-sample ``lengths``.
+
+    Per-layer caches carry their own ``pos`` (the decode valid-length); for a
+    ragged (right-padded) prefill they must all report the true length, not
+    the padded one. Scanned-segment leaves are (reps, B) — broadcast covers
+    both layouts.
+    """
+    if isinstance(tree, dict):
+        return {k: (jnp.broadcast_to(lengths.astype(v.dtype), v.shape)
+                    if k == "pos" else override_cache_pos(v, lengths))
+                for k, v in tree.items()}
+    return tree
 
 
 def _pad_cache(c, max_len):

@@ -1,0 +1,12 @@
+"""Continuous-batching serving subsystem (slot-based engine + KV cache).
+
+See docs/serving.md for the slot lifecycle and cache layout.
+"""
+from repro.serve.cache import SlotCache, cache_bytes
+from repro.serve.engine import (Completion, Request, ServeEngine,
+                                run_static_trace, synthetic_trace,
+                                percentile_table)
+
+__all__ = ["SlotCache", "cache_bytes", "Request", "Completion",
+           "ServeEngine", "run_static_trace", "synthetic_trace",
+           "percentile_table"]

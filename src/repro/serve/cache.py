@@ -1,0 +1,91 @@
+"""Preallocated per-slot KV cache for the continuous-batching engine.
+
+The engine runs ONE shared jitted decode step over all ``n_slots`` slots; a
+request occupies a slot for its lifetime, and admitting a new request only
+overwrites that slot's rows — no reshape, no reallocation, no recompile.
+
+Layout
+------
+The global cache is the model's own prefill-cache pytree with the batch axis
+widened to ``n_slots``. The batch axis is NOT uniformly the leading axis:
+scanned-segment leaves are stacked ``(reps, B, max_len, ...)`` and enc-dec
+decoder stacks are ``(n_layers, B, ...)``, so the per-leaf batch axis is
+*inferred structurally* — ``jax.eval_shape`` of the prefill at two batch
+sizes, and the axis whose dim differs is the batch axis. Slot writes are then
+``dynamic_update_index_in_dim`` along that axis per leaf (donated, so XLA
+updates in place).
+
+Per-slot validity lives in the cache itself: every layer cache carries a
+``pos`` (B,) valid-length which the decode attention turns into its key mask
+(``key_idx <= pos``) — exactly the masked-cache contract of
+``kernels/flash_decode/decode_attention``. Free slots simply keep decoding
+into discarded lanes; their ``pos`` may walk past ``max_len``, where the
+scatter drops out-of-bounds writes (jax semantics), so stale slots are inert
+until the next admit overwrites them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _infer_batch_axes(tree1, tree2):
+    """Per-leaf batch axis: the first dim that differs between the two
+    ShapeDtypeStruct trees (evaluated at two different batch sizes)."""
+    def axis_of(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise ValueError(f"no batch axis found in cache leaf {a.shape}")
+    return jax.tree.map(axis_of, tree1, tree2)
+
+
+def cache_bytes(tree) -> int:
+    """Total bytes held by a cache pytree."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+class SlotCache:
+    """n_slots-wide preallocated decode cache with per-slot writes.
+
+    Built lazily from the *shape* of the model's prefill cache (no forward
+    pass): ``template_fn(batch)`` must return the prefill-cache
+    ShapeDtypeStruct tree at that batch size (time axis already padded to
+    ``max_len``).
+    """
+
+    def __init__(self, template_fn, n_slots: int):
+        self.n_slots = n_slots
+        sds1, sds2 = template_fn(1), template_fn(2)
+        self.batch_axes = _infer_batch_axes(sds1, sds2)
+        self._template = template_fn(n_slots)
+        self.cache = self._zeros()
+        # donate the global cache so XLA updates the slot rows in place
+        # (the batch-1 local cache has different shapes, so it can't donate)
+        self._write = jax.jit(self._write_impl, donate_argnums=(0,))
+
+    def _zeros(self):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self._template)
+
+    def reset(self):
+        """Drop all slot contents (e.g. after compile warmup)."""
+        self.cache = self._zeros()
+
+    def _write_impl(self, global_c, local_c, slot):
+        def put(g, l, ax):
+            row = jax.lax.index_in_dim(l, 0, ax, keepdims=False)
+            return jax.lax.dynamic_update_index_in_dim(
+                g, row.astype(g.dtype), slot, ax)
+        return jax.tree.map(put, global_c, local_c, self.batch_axes)
+
+    def write_slot(self, local_cache, slot: int):
+        """Admit: copy a batch-1 prefill cache into slot ``slot``."""
+        self.cache = self._write(self.cache, local_cache,
+                                 jnp.int32(slot))
+
+    @property
+    def bytes(self) -> int:
+        return cache_bytes(self.cache)

@@ -25,8 +25,15 @@ def test_markdown_links_resolve():
 def test_readme_and_docs_exist():
     for rel in ("README.md", "docs/calibration.md", "docs/cli.md",
                 "docs/kernels.md", "docs/roofline.md", "docs/pipeline.md",
-                "ROADMAP.md", "PAPER.md"):
+                "docs/serving.md", "ROADMAP.md", "PAPER.md"):
         assert os.path.exists(os.path.join(ROOT, rel)), rel
+
+
+def test_readme_links_serving_doc():
+    """The serving-engine design doc must stay reachable from the README
+    (acceptance criterion of the continuous-batching PR)."""
+    readme = open(os.path.join(ROOT, "README.md"), encoding="utf-8").read()
+    assert "docs/serving.md" in readme
 
 
 def test_readme_links_pipeline_doc():
@@ -47,18 +54,35 @@ def test_pipeline_doc_carries_hit_rate_table():
     assert "bench_calibration.py" in doc
 
 
-def _prune_flags():
+def _cli_flags(module):
     src = open(os.path.join(ROOT, "src", "repro", "launch",
-                            "prune.py"), encoding="utf-8").read()
+                            f"{module}.py"), encoding="utf-8").read()
     flags = set(re.findall(r'add_argument\("(--[a-z0-9-]+)"', src))
-    assert flags, "no flags parsed from launch/prune.py"
+    assert flags, f"no flags parsed from launch/{module}.py"
     return flags
+
+
+def _prune_flags():
+    return _cli_flags("prune")
+
+
+def _serve_flags():
+    return _cli_flags("serve")
 
 
 def test_cli_doc_covers_every_prune_flag():
     """docs/cli.md must document every --flag launch/prune.py defines (so a
     new flag without docs fails here, not in review)."""
     flags = _prune_flags()
+    doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
+    missing = {f for f in flags if f"`{f}`" not in doc}
+    assert not missing, f"flags undocumented in docs/cli.md: {sorted(missing)}"
+
+
+def test_cli_doc_covers_every_serve_flag():
+    """Same coverage direction for the serving CLI: every --flag
+    launch/serve.py defines (--trace, --slots, ...) must be documented."""
+    flags = _serve_flags()
     doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
     missing = {f for f in flags if f"`{f}`" not in doc}
     assert not missing, f"flags undocumented in docs/cli.md: {sorted(missing)}"
@@ -74,12 +98,12 @@ def _table_flags(rel):
     return documented
 
 
-def test_cli_doc_has_no_stale_prune_flags():
-    """The reverse direction: every `--flag` docs/cli.md's Flags table
-    documents must still exist in launch/prune.py — catches renamed or
-    removed flags leaving stale docs behind (the --rank-policy drift class
-    fixed in PR 2)."""
-    flags = _prune_flags()
+def test_cli_doc_has_no_stale_flags():
+    """The reverse direction: every `--flag` docs/cli.md's Flags tables
+    document must still exist in launch/prune.py or launch/serve.py —
+    catches renamed or removed flags leaving stale docs behind (the
+    --rank-policy drift class fixed in PR 2)."""
+    flags = _prune_flags() | _serve_flags()
     documented = _table_flags("docs/cli.md")
     assert documented, "no flags parsed from docs/cli.md's table"
     stale = documented - flags

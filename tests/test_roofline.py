@@ -111,7 +111,10 @@ def test_cache_partition_specs_finds_batch_dim():
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: without it jax probes the TPU backend, and on TPU-shaped
+    # containers without TPU metadata libtpu retries for ~7 minutes —
+    # blowing this subprocess's 120 s timeout (host devices are CPU-only)
+    env["JAX_PLATFORMS"] = "cpu"
     code = """
 import jax, jax.numpy as jnp
 from repro.launch.dryrun import cache_partition_specs

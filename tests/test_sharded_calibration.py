@@ -26,7 +26,10 @@ def run_py(code: str, devices: int = 4, timeout: int = 560):
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep \
         + os.path.dirname(__file__)
-    env.pop("JAX_PLATFORMS", None)
+    # force CPU: with JAX_PLATFORMS unset, jax probes the TPU backend and
+    # on TPU-shaped containers without TPU metadata each subprocess stalls
+    # ~7 minutes in libtpu GCP-metadata retries before falling back
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=timeout)
     assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"

@@ -16,7 +16,11 @@ def run_py(code: str, devices: int = 8, timeout: int = 560):
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force the host platform: with JAX_PLATFORMS unset, jax probes the TPU
+    # backend first, and on TPU-shaped containers without TPU metadata the
+    # libtpu GCP metadata fetch retries for ~7 minutes per subprocess before
+    # falling back to CPU (the host-device-count flag only applies to CPU).
+    env["JAX_PLATFORMS"] = "cpu"
     r = subprocess.run([sys.executable, "-c", code], env=env,
                        capture_output=True, text=True, timeout=timeout)
     assert r.returncode == 0, f"stderr:\n{r.stderr[-3000:]}"
@@ -133,7 +137,10 @@ with mesh:
                       out_shardings=(pshard, oshard, None)).lower(
         params_sds, opt_sds, batch)
     compiled = lowered.compile()
-print('flops', compiled.cost_analysis().get('flops'))
+ca = compiled.cost_analysis()
+if isinstance(ca, list):   # older jax returns [dict] per computation
+    ca = ca[0] if ca else {}
+print('flops', ca.get('flops'))
 print('OK')
 """)
     assert "OK" in out
