@@ -19,6 +19,20 @@ Gates:
             must be smaller than the dense one (qk dims shrink the K rows),
             with the dense/pruned serving table printed for the docs.
 
+Front-end gates (ISSUE 6):
+
+  frontend == engine — the async front-end's token streams must be
+            byte-identical to ``ServeEngine.run`` on the same trace
+            (no deadlines, no prefix cache).
+
+  overload rejects, never deadlocks — a burst of 3x capacity must shed
+            exactly the overflow with typed rejections, serve the rest to
+            completion, and keep p99 ttft bounded by the run's wall time.
+
+  prefix hit < cold prefill — admitting a prompt whose 96-token prefix is
+            cached must beat a cold full prefill on median ttft (printed
+            as the prefix-hit vs cold table).
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_serve.py
 """
 from __future__ import annotations
@@ -36,9 +50,10 @@ import jax  # noqa: E402
 from benchmarks.common import calib_lm, params_of, trained_lm  # noqa: E402
 from repro.core import PruneConfig, corp_prune  # noqa: E402
 from repro.models import build_model  # noqa: E402
-from repro.serve import (ServeEngine, percentile_table,  # noqa: E402
+from repro.serve import (PrefixCache, ServeEngine,  # noqa: E402
+                         ServeFrontend, Status, percentile_table,
                          run_static_trace, synthetic_trace)
-from repro.serve.engine import format_table  # noqa: E402
+from repro.serve.engine import Request, format_table  # noqa: E402
 
 SLOTS = 4
 MAX_LEN = 128
@@ -61,6 +76,79 @@ def serve_static(model, params, trace):
                              max_len=MAX_LEN)
     wall = max(c.t_done for c in comps)
     return comps, percentile_table(comps, wall)
+
+
+def gate_frontend_parity(model, params, trace, comps_engine):
+    """Front-end streams must be byte-identical to the engine's runner."""
+    import numpy as np
+    eng = ServeEngine(model, params, n_slots=SLOTS, max_len=MAX_LEN)
+    eng.warmup(prompt_lens=[len(r.tokens) for r in trace])
+    handles = ServeFrontend(eng, queue_depth=len(trace)).run(trace)
+    by_rid = {c.rid: c for c in comps_engine}
+    for h in handles:
+        assert h.status is Status.DONE, f"rid {h.rid} ended {h.status}"
+        assert h.tokens == list(np.asarray(by_rid[h.rid].tokens)), (
+            f"front-end stream diverged from engine on rid {h.rid}")
+    print("[bench_serve] GATE frontend == engine: "
+          f"{len(handles)} token streams byte-identical")
+
+
+def gate_overload(model, params, vocab):
+    """3x-capacity burst: shed the overflow, finish the rest, stay live."""
+    depth = SLOTS
+    n = 3 * (SLOTS + depth)
+    trace = synthetic_trace(n, vocab, seed=2, prompt_range=(8, 24),
+                            gen_range=(4, 16))       # all arrive at t=0
+    eng = ServeEngine(model, params, n_slots=SLOTS, max_len=MAX_LEN)
+    eng.warmup(prompt_lens=[len(r.tokens) for r in trace])
+    fe = ServeFrontend(eng, queue_depth=depth)
+    t0 = time.perf_counter()
+    handles = fe.run(trace)
+    wall = time.perf_counter() - t0
+    from repro.serve import frontend_table
+    tab = frontend_table(handles, wall)
+    print(format_table([tab], ["requests", "done", "rejected", "tokens",
+                               "ttft_p50_ms", "ttft_p99_ms"]))
+    assert tab["rejected"] == n - SLOTS - depth, (
+        f"expected {n - SLOTS - depth} rejections, got {tab['rejected']}")
+    assert tab["done"] == SLOTS + depth
+    assert tab["ttft_p99_ms"] <= wall * 1e3, "ttft unbounded under overload"
+    print(f"[bench_serve] GATE overload: {tab['rejected']}/{n} shed, "
+          f"{tab['done']} served, ttft p99 {tab['ttft_p99_ms']:.1f} ms "
+          f"<= wall {wall * 1e3:.1f} ms")
+
+
+def gate_prefix_ttft(model, params):
+    """Median prefix-hit admit must beat a cold full prefill."""
+    import numpy as np
+    eng = ServeEngine(model, params, n_slots=1, max_len=MAX_LEN)
+    eng.warmup(prompt_lens=[97], prefix=True)
+    eng.begin()
+    shared = (np.arange(96) % 7 + 1).astype(np.int32)
+    pc = PrefixCache(cap=4, min_hit=8)
+
+    def admit_ms(rid, cache):
+        toks = np.concatenate([shared, np.full((1,), 20 + rid, np.int32)])
+        t0 = time.perf_counter()
+        eng.admit(Request(rid=rid, tokens=toks, gen=2), 0,
+                  prefix_cache=cache)
+        dt = (time.perf_counter() - t0) * 1e3
+        eng.retire(0)
+        return dt
+
+    cold = [admit_ms(i, None) for i in range(8)]
+    admit_ms(100, pc)                                # prime the cache
+    warm = [admit_ms(200 + i, pc) for i in range(8)]
+    cold_med, warm_med = float(np.median(cold)), float(np.median(warm))
+    print(format_table([
+        {"admit": "cold prefill", "ttft_p50_ms": cold_med},
+        {"admit": "prefix hit", "ttft_p50_ms": warm_med}]))
+    assert warm_med < cold_med, (
+        f"prefix hit not faster: {warm_med:.2f} vs {cold_med:.2f} ms")
+    assert eng.stats["prefix_hits"] == 8
+    print(f"[bench_serve] GATE prefix hit < cold prefill: "
+          f"{warm_med:.2f} < {cold_med:.2f} ms "
+          f"({pc.stats()['reused_tokens']} tokens reused)")
 
 
 def main():
@@ -101,6 +189,11 @@ def main():
     print(f"[bench_serve] GATE continuous >= static: "
           f"{tc['tok_per_s']:.1f} >= {ts['tok_per_s']:.1f} tok/s "
           f"({tc['tok_per_s'] / ts['tok_per_s']:.2f}x)")
+
+    # front-end gates (ISSUE 6)
+    gate_frontend_parity(model, params, trace, comps_c)
+    gate_overload(model, params, cfg.vocab_size)
+    gate_prefix_ttft(model, params)
 
     # dense vs pruned serving table
     print(f"[bench_serve] CORP prune @ {args.sparsity:.0%}")

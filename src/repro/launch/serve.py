@@ -5,11 +5,17 @@ Fixed-batch (the pre-engine baseline, kept for comparison):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b-reduced \
         --batch 4 --prompt-len 32 --gen 16
 
-Continuous batching over a synthetic ragged arrival trace (reports p50/p99
-per-request latency and aggregate tok/s — see docs/serving.md):
+Continuous batching over a synthetic ragged arrival trace, driven through
+the async front-end (bounded queue, deadlines, prefix cache — reports
+per-status counts plus p50/p99 latency/ttft; see docs/serving.md):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b-reduced \
         --trace 24 --slots 4 --max-len 128 --compare-static
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b-reduced \
+        --trace 32 --slots 4 --rate 20 --queue-depth 8 \
+        --deadline-ms 200,800 --deadline-frac 0.5 \
+        --prefix-cache 8 --prefix-len 24
 
 With --ckpt-in it serves a pruned checkpoint produced by repro.launch.prune
 (pass --sparsity to match); pruned configs shrink the KV cache automatically.
@@ -78,28 +84,49 @@ def serve_loop(model, params, *, batch, prompt_len, gen, max_len,
 
 
 def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
-                rate=None, seed=0, compare_static=False, log=print):
-    """Continuous-batching engine over a synthetic ragged trace."""
-    from repro.serve import (ServeEngine, percentile_table, run_static_trace,
-                             synthetic_trace)
+                rate=None, seed=0, compare_static=False, queue_depth=16,
+                deadline_ms=None, deadline_frac=1.0, prefix_cache=0,
+                prefix_len=0, spf=False, log=print):
+    """Async front-end + continuous-batching engine over a synthetic trace.
+
+    The trace drives the full serving stack: Poisson arrivals (``rate``),
+    a deadline mix (``deadline_ms`` range hits ``deadline_frac`` of the
+    requests), bounded-queue admission (``queue_depth``, FIFO or
+    shortest-prompt-first), and optional prefix-cache reuse of a shared
+    ``prefix_len``-token system prompt. Overload surfaces as typed
+    rejections in the table, never as a deadlock.
+    """
+    from repro.serve import (PrefixCache, ServeEngine, ServeFrontend,
+                             frontend_table, percentile_table,
+                             run_static_trace, synthetic_trace)
     from repro.serve.engine import format_table
     cfg = model.cfg
+    dl_range = None if deadline_ms is None else \
+        tuple(x / 1e3 for x in deadline_ms)
     trace = synthetic_trace(n, cfg.vocab_size, seed=seed,
                             prompt_range=prompt_range, gen_range=gen_range,
-                            rate=rate)
+                            rate=rate, deadline_range=dl_range,
+                            deadline_frac=deadline_frac,
+                            prefix_len=prefix_len)
     eng = ServeEngine(model, params, n_slots=slots, max_len=max_len)
-    eng.warmup(prompt_lens=[len(r.tokens) for r in trace])
+    eng.warmup(prompt_lens=[len(r.tokens) for r in trace],
+               prefix=prefix_cache > 0)
+    pc = PrefixCache(cap=prefix_cache) if prefix_cache > 0 else None
+    fe = ServeFrontend(eng, queue_depth=queue_depth,
+                       policy="spf" if spf else "fifo", prefix_cache=pc)
     t0 = time.perf_counter()
-    comps = eng.run(trace)
+    handles = fe.run(trace, log=log)
     wall = time.perf_counter() - t0
-    table = percentile_table(comps, wall)
-    table["mode"] = "continuous"
+    table = frontend_table(handles, wall)
+    table["mode"] = "frontend"
     rows = [table]
-    log(f"[serve] continuous: {eng.stats['admits']} admits, "
+    log(f"[serve] frontend: {eng.stats['admits']} admits, "
         f"{eng.stats['decode_steps']} decode steps, "
         f"lane utilization "
         f"{eng.stats['decode_lanes'] / max(1, eng.stats['decode_steps'] * slots):.0%}, "
         f"cache {eng.cache_bytes / 1e6:.2f} MB")
+    if pc is not None:
+        log(f"[serve] prefix cache: {pc.stats()}")
     if compare_static:
         # run_static_trace compile-warms internally; time from its clock
         comps_s = run_static_trace(model, params, trace, n_slots=slots,
@@ -107,10 +134,11 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
         ts = percentile_table(comps_s, max(c.t_done for c in comps_s))
         ts["mode"] = "static"
         rows.append(ts)
-    keys = ["mode", "requests", "tokens", "tok_per_s", "lat_p50_ms",
-            "lat_p99_ms", "ttft_p50_ms", "ttft_p99_ms"]
+    keys = ["mode", "requests", "done", "rejected", "expired", "tokens",
+            "tok_per_s", "lat_p50_ms", "lat_p99_ms", "ttft_p50_ms",
+            "ttft_p99_ms"]
     log(format_table(rows, keys))
-    return comps, table
+    return handles, table
 
 
 def main():
@@ -139,6 +167,23 @@ def main():
     ap.add_argument("--compare-static", action="store_true",
                     help="also run the fixed-batch baseline on the same "
                          "trace and print both rows")
+    ap.add_argument("--queue-depth", type=int, default=16,
+                    help="bounded admission queue beyond the slots; "
+                         "requests past it are rejected (backpressure)")
+    ap.add_argument("--deadline-ms", default=None,
+                    help="per-request deadline budget, 'lo,hi' ms after "
+                         "arrival; expired requests keep partial tokens")
+    ap.add_argument("--deadline-frac", type=float, default=1.0,
+                    help="fraction of requests given a deadline "
+                         "(the deadline mix)")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="prefix-cache capacity in entries; 0 disables "
+                         "(pure global-attention LMs only)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared system-prompt tokens prepended to every "
+                         "trace request (the prefix-cache workload)")
+    ap.add_argument("--spf", action="store_true",
+                    help="shortest-prompt-first admission instead of FIFO")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch)
@@ -153,10 +198,16 @@ def main():
     if args.trace > 0:
         pr = tuple(int(x) for x in args.prompt_range.split(","))
         gr = tuple(int(x) for x in args.gen_range.split(","))
+        dl = None if args.deadline_ms is None else \
+            tuple(float(x) for x in args.deadline_ms.split(","))
         serve_trace(model, params, n=args.trace, slots=args.slots,
                     max_len=args.max_len, prompt_range=pr, gen_range=gr,
                     rate=args.rate, seed=args.seed,
-                    compare_static=args.compare_static)
+                    compare_static=args.compare_static,
+                    queue_depth=args.queue_depth, deadline_ms=dl,
+                    deadline_frac=args.deadline_frac,
+                    prefix_cache=args.prefix_cache,
+                    prefix_len=args.prefix_len, spf=args.spf)
     else:
         serve_loop(model, params, batch=args.batch,
                    prompt_len=args.prompt_len, gen=args.gen,

@@ -1,12 +1,19 @@
-"""Continuous-batching serving subsystem (slot-based engine + KV cache).
+"""Continuous-batching serving subsystem (slot engine + async front-end).
 
-See docs/serving.md for the slot lifecycle and cache layout.
+See docs/serving.md for the slot lifecycle, cache layout, and the
+front-end's queue/deadline/prefix-cache semantics.
 """
 from repro.serve.cache import SlotCache, cache_bytes
 from repro.serve.engine import (Completion, Request, ServeEngine,
                                 run_static_trace, synthetic_trace,
                                 percentile_table)
+from repro.serve.frontend import (AsyncServeFrontend, Handle, ServeFrontend,
+                                  frontend_table)
+from repro.serve.prefix import PrefixCache
+from repro.serve.queue import AdmissionQueue, Overloaded, Status
 
 __all__ = ["SlotCache", "cache_bytes", "Request", "Completion",
            "ServeEngine", "run_static_trace", "synthetic_trace",
-           "percentile_table"]
+           "percentile_table", "ServeFrontend", "AsyncServeFrontend",
+           "Handle", "frontend_table", "PrefixCache", "AdmissionQueue",
+           "Overloaded", "Status"]

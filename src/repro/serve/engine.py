@@ -44,6 +44,7 @@ class Request:
     gen: int                      # tokens to generate (>= 1)
     arrival: float = 0.0          # seconds relative to trace start
     frames: Optional[np.ndarray] = None   # (S, D) enc-dec memory frames
+    deadline: Optional[float] = None      # absolute trace time; None = none
 
 
 @dataclasses.dataclass
@@ -122,6 +123,10 @@ class ServeEngine:
         self.tokens = np.zeros((n_slots,), np.int32)   # next decode inputs
         self.slotcache = SlotCache(self._cache_template, n_slots)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        # batch-1 decode over a *local* (pre-scatter) cache: the prefix-hit
+        # suffix path. NOT donated — the input may be a shared PrefixCache
+        # entry whose buffers must survive the call.
+        self._decode1 = jax.jit(self._decode_impl)
         self._prefill = jax.jit(self._prefill_impl)
         self.stats = collections.Counter()
         self._t0 = None
@@ -176,25 +181,71 @@ class ServeEngine:
     def _now(self) -> float:
         return time.perf_counter() - self._t0
 
-    def admit(self, req: Request, slot: int):
-        """Prefill ``req`` and install it into ``slot``."""
+    def begin(self, t0: Optional[float] = None):
+        """Anchor the engine clock. ``run``/``warmup`` call this themselves;
+        external drivers (the serving front-end) that call ``admit``/
+        ``decode_step`` directly must call it once before serving."""
+        self._t0 = time.perf_counter() if t0 is None else t0
+
+    # prefix reuse is exact only where ragged prefill is (pure causal global
+    # attention: cache rows are a pure function of the tokens at or before
+    # them); enc-dec is excluded because the encoder memory keys the cross
+    # attention, not the prompt tokens alone
+    def prefix_eligible(self) -> bool:
+        return self.ragged_ok and self.cfg.family == "lm"
+
+    def _splice_prefix(self, req: Request, entry_cache, hit_len: int):
+        """Prefix-hit admit path: rewind a cached prefill cache to the hit
+        length and run only the un-cached suffix, token by token, through
+        the batch-1 decode step. Exact by causality (see serve/prefix.py).
+        Returns (first_token, local_cache) like ``_prefill``."""
+        from repro.models.lm import override_cache_pos
+        P = len(req.tokens)
+        local = override_cache_pos(entry_cache,
+                                   jnp.full((1,), hit_len, jnp.int32))
+        nxt = None
+        for t in np.asarray(req.tokens[hit_len:], np.int32):
+            nxt, local = self._decode1(self.params,
+                                       jnp.full((1, 1), t, jnp.int32), local)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_reused_tokens"] += hit_len
+        self.stats["prefix_suffix_tokens"] += P - hit_len
+        return int(nxt[0]), local
+
+    def admit(self, req: Request, slot: int, prefix_cache=None):
+        """Prefill ``req`` and install it into ``slot``.
+
+        With a ``prefix_cache`` (serve/prefix.py) on a prefix-eligible
+        config, a prompt sharing a cached prefix skips recomputing it; the
+        full prefill result is inserted back into the cache either way.
+        """
         P = len(req.tokens)
         if P + req.gen > self.max_len:
             raise ValueError(f"request {req.rid}: prompt {P} + gen "
                              f"{req.gen} exceeds max_len {self.max_len}")
-        L = self._bucket(P)
-        toks = np.zeros((1, L), np.int32)
-        toks[0, :P] = req.tokens
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.family == "encdec":
-            fr = np.asarray(req.frames)
-            if fr.shape[0] != self.mem_len:
-                raise ValueError(f"request {req.rid}: frames length "
-                                 f"{fr.shape[0]} != mem_len {self.mem_len}")
-            batch["frames"] = jnp.asarray(fr)[None]
-        first, local = self._prefill(self.params, batch,
-                                     jnp.asarray([P], jnp.int32))
-        first = int(first[0])
+        use_prefix = prefix_cache is not None and self.prefix_eligible()
+        hit = prefix_cache.lookup(req.tokens) if use_prefix else None
+        if hit is not None:
+            first, local = self._splice_prefix(req, hit[0].cache, hit[1])
+        else:
+            L = self._bucket(P)
+            toks = np.zeros((1, L), np.int32)
+            toks[0, :P] = req.tokens
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.family == "encdec":
+                fr = np.asarray(req.frames)
+                if fr.shape[0] != self.mem_len:
+                    raise ValueError(f"request {req.rid}: frames length "
+                                     f"{fr.shape[0]} != mem_len "
+                                     f"{self.mem_len}")
+                batch["frames"] = jnp.asarray(fr)[None]
+            first, local = self._prefill(self.params, batch,
+                                         jnp.asarray([P], jnp.int32))
+            first = int(first[0])
+            self.stats[f"prefill_b{L}"] += 1
+        if use_prefix:
+            from repro.serve.cache import cache_bytes
+            prefix_cache.insert(req.tokens, local, cache_bytes(local))
         s = self.slots[slot]
         if s.out:                      # slot previously served a request
             self.stats["refills"] += 1
@@ -205,7 +256,6 @@ class ServeEngine:
         self.tokens[slot] = first
         self.slotcache.write_slot(local, slot)
         self.stats["admits"] += 1
-        self.stats[f"prefill_b{L}"] += 1
 
     def decode_step(self):
         """One shared decode step over every slot; returns retired slots."""
@@ -230,13 +280,30 @@ class ServeEngine:
                 retired.append(i)
         return retired
 
-    def _retire(self, slot: int, done: dict):
+    def retire(self, slot: int) -> Completion:
+        """Free ``slot`` and return its finished request's Completion.
+        The slot is immediately refillable (the next admit overwrites it)."""
         s = self.slots[slot]
-        done[s.rid] = Completion(
+        comp = Completion(
             rid=s.rid, tokens=np.asarray(s.out, np.int32),
             prompt_len=len(s.req.tokens), arrival=s.req.arrival,
             t_admit=s.t_admit, t_first=s.t_first, t_done=self._now())
         s.rid, s.req, s.remaining = -1, None, 0
+        return comp
+
+    def cancel(self, slot: int) -> List[int]:
+        """Retire hook for the front-end: drop ``slot``'s request mid-
+        generation (deadline expiry / caller cancel) and return the partial
+        tokens produced so far. The slot is refillable on the next admit,
+        exactly like a normal retire — its stale cache lanes are inert
+        (masked by ``pos``) until overwritten."""
+        s = self.slots[slot]
+        if s.free:
+            raise ValueError(f"cancel on free slot {slot}")
+        partial = list(s.out)
+        s.rid, s.req, s.remaining = -1, None, 0
+        self.stats["cancels"] += 1
+        return partial
 
     # -- driver -------------------------------------------------------------
 
@@ -245,7 +312,7 @@ class ServeEngine:
         queue = collections.deque(
             sorted(requests, key=lambda r: (r.arrival, r.rid)))
         done: dict = {}
-        self._t0 = time.perf_counter()
+        self.begin()
         while queue or self.active_count():
             now = self._now()
             free = self.free_slots()
@@ -253,7 +320,8 @@ class ServeEngine:
                 slot = free[0]
                 self.admit(queue.popleft(), slot)
                 if self.slots[slot].remaining == 0:
-                    self._retire(slot, done)   # gen==1: prefill token only
+                    comp = self.retire(slot)
+                    done[comp.rid] = comp  # gen==1: prefill token only
                 else:
                     free.pop(0)
             if not self.active_count():
@@ -266,12 +334,27 @@ class ServeEngine:
                 if log:
                     log(f"[serve] rid={s.rid} done "
                         f"({len(s.out)} tok, slot {slot})")
-                self._retire(slot, done)
+                comp = self.retire(slot)
+                done[comp.rid] = comp
         return [done[r.rid] for r in sorted(requests, key=lambda r: r.rid)]
 
-    def warmup(self, prompt_lens=(8,), gen: int = 2):
+    def warmup(self, prompt_lens=(8,), gen: int = 2, prefix: bool = False):
         """Compile prefill (per bucket), decode, and the slot write outside
-        any timed region; resets the engine afterwards."""
+        any timed region; resets the engine afterwards. ``prefix=True``
+        additionally compiles the batch-1 suffix decode the prefix-hit
+        admit path uses."""
+        if prefix:
+            if not self.prefix_eligible():
+                raise ValueError(f"{self.cfg.name}: prefix cache needs a "
+                                 "pure global-attention LM stack "
+                                 "(same soundness bound as ragged prefill)")
+            from repro.models.lm import override_cache_pos
+            local = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                 self._cache_template(1))
+            # the splice path = pos rewind + batch-1 suffix decode; compile
+            # both so the first prefix hit isn't charged compile time
+            local = override_cache_pos(local, jnp.zeros((1,), jnp.int32))
+            self._decode1(self.params, jnp.zeros((1, 1), jnp.int32), local)
         reqs = []
         for i, b in enumerate(sorted({self._bucket(p)
                                       for p in prompt_lens})):
@@ -377,21 +460,54 @@ def run_static_trace(model, params, requests: List[Request], *,
 # synthetic ragged traces + reporting
 # ---------------------------------------------------------------------------
 
+def _substream(seed: int, salt: int) -> np.random.RandomState:
+    """Independent RNG stream per trace field (seed determinism contract)."""
+    return np.random.RandomState((seed * 0x9E3779B1 + salt) & 0xFFFFFFFF)
+
+
 def synthetic_trace(n: int, vocab: int, *, seed: int = 0,
                     prompt_range=(8, 48), gen_range=(4, 48),
-                    rate: Optional[float] = None) -> List[Request]:
+                    rate: Optional[float] = None,
+                    deadline_range=None, deadline_frac: float = 1.0,
+                    prefix_len: int = 0) -> List[Request]:
     """Ragged arrival trace: mixed prompt/gen lengths, optional Poisson
-    arrivals at ``rate`` req/s (default: all available at t=0)."""
-    rng = np.random.RandomState(seed)
+    arrivals at ``rate`` req/s (default: all available at t=0).
+
+    Every field draws from its own seed-derived substream, so ``seed``
+    fully determinizes the trace field-by-field: toggling ``rate`` cannot
+    reshuffle prompt/gen lengths, and adding deadlines cannot perturb the
+    arrival timeline (previously one shared stream coupled every draw
+    order — ``tests/test_serve_properties.py`` pins the contract).
+
+    ``deadline_range=(lo, hi)`` gives a ``deadline_frac`` fraction of
+    requests an absolute deadline ``arrival + U(lo, hi)`` seconds (the
+    rest run un-deadlined — the "deadline mix"). ``prefix_len > 0``
+    prepends one shared system prompt of that many tokens to every request
+    (``prompt_range`` then sizes the per-request *suffix*) — the
+    prefix-cache workload.
+    """
+    rng_arr = _substream(seed, 1)
+    rng_len = _substream(seed, 2)
+    rng_tok = _substream(seed, 3)
+    rng_dl = _substream(seed, 4)
     arrivals = np.zeros(n) if rate is None else \
-        np.cumsum(rng.exponential(1.0 / rate, size=n))
+        np.cumsum(rng_arr.exponential(1.0 / rate, size=n))
+    shared = rng_tok.randint(0, vocab, size=prefix_len).astype(np.int32) \
+        if prefix_len else None
     reqs = []
     for i in range(n):
-        P = int(rng.randint(prompt_range[0], prompt_range[1] + 1))
-        G = int(rng.randint(gen_range[0], gen_range[1] + 1))
-        reqs.append(Request(
-            rid=i, tokens=rng.randint(0, vocab, size=P).astype(np.int32),
-            gen=G, arrival=float(arrivals[i])))
+        P = int(rng_len.randint(prompt_range[0], prompt_range[1] + 1))
+        G = int(rng_len.randint(gen_range[0], gen_range[1] + 1))
+        toks = rng_tok.randint(0, vocab, size=P).astype(np.int32)
+        if shared is not None:
+            toks = np.concatenate([shared, toks])
+        deadline = None
+        if deadline_range is not None:
+            budget = float(rng_dl.uniform(*deadline_range))
+            if rng_dl.uniform() < deadline_frac:
+                deadline = float(arrivals[i]) + budget
+        reqs.append(Request(rid=i, tokens=toks, gen=G,
+                            arrival=float(arrivals[i]), deadline=deadline))
     return reqs
 
 
@@ -420,5 +536,6 @@ def format_table(rows: List[dict], keys=None) -> str:
     out = ["| " + " | ".join(keys) + " |",
            "|" + "---|" * len(keys)]
     for r in rows:
-        out.append("| " + " | ".join(fmt(r[k]) for k in keys) + " |")
+        out.append("| " + " | ".join(fmt(r.get(k, "-")) for k in keys)
+                   + " |")
     return "\n".join(out)

@@ -1,0 +1,118 @@
+"""LRU prefix cache: reuse prefill KV across requests sharing a prompt prefix.
+
+The common production case is a long shared system prompt followed by a
+short user-specific suffix. A cold admit prefills the whole prompt; this
+cache keeps the batch-1 prefill cache pytrees of recent prompts so a later
+request whose prompt *starts with* a cached prompt's tokens can skip
+recomputing that prefix entirely.
+
+Exactness argument (same as ragged prefill, docs/serving.md): in a pure
+causal global-attention stack, cache row ``i`` depends only on tokens
+``<= i``. Any prefix of a cached prompt's rows is therefore *exactly* the
+cache a fresh prefill of that prefix would produce — reuse is a ``pos``
+rewind (``override_cache_pos`` to the hit length; stale rows beyond it are
+masked by ``key_idx <= pos`` and overwritten as decode proceeds), followed
+by per-token decode steps over only the un-cached suffix. Sliding-window
+ring buffers and recurrent states violate the row-locality premise, so the
+engine only consults this cache when ``ragged_ok`` (it falls back to a full
+prefill otherwise).
+
+Entries are whole device-resident cache pytrees (``(1, max_len, ...)`` per
+leaf), so capacity is small and LRU: ``cap`` entries, least-recently-hit
+evicted first. All jax arrays are immutable — handing a cached pytree to
+the (non-donating) suffix decode can never corrupt the entry.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    tokens: np.ndarray        # (P,) int32 — the prompt this cache prefilled
+    cache: object             # batch-1 prefill cache pytree (device arrays)
+    nbytes: int
+
+
+def common_prefix_len(a: np.ndarray, b: np.ndarray) -> int:
+    """Length of the longest common prefix of two 1-D token arrays."""
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if len(neq) else n
+
+
+class PrefixCache:
+    """LRU over recent prefill caches, looked up by longest shared prefix.
+
+    ``min_hit`` is the smallest reusable prefix worth taking: a 1-token hit
+    saves one prefill position but costs a cache scan, so tiny overlaps are
+    treated as misses.
+    """
+
+    def __init__(self, cap: int = 8, min_hit: int = 4):
+        if cap <= 0:
+            raise ValueError(f"prefix cache cap must be > 0, got {cap}")
+        self.cap, self.min_hit = cap, min_hit
+        self._entries: "collections.OrderedDict[bytes, PrefixEntry]" = \
+            collections.OrderedDict()
+        self.hits = self.misses = self.evictions = 0
+        self.reused_tokens = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def bytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())
+
+    @staticmethod
+    def _key(tokens: np.ndarray) -> bytes:
+        return np.asarray(tokens, np.int32).tobytes()
+
+    def lookup(self, tokens) -> Optional[Tuple[PrefixEntry, int]]:
+        """Best reusable entry for a new prompt, or None.
+
+        Returns ``(entry, L)`` with ``L`` the number of leading prompt
+        tokens covered by the entry — capped at ``len(tokens) - 1`` so at
+        least one prompt token always runs through the model (its logits
+        produce the first generated token). Counts a hit/miss and refreshes
+        the hit entry's LRU position.
+        """
+        tokens = np.asarray(tokens, np.int32)
+        best, best_key, best_len = None, None, 0
+        for key, e in self._entries.items():
+            L = common_prefix_len(e.tokens, tokens)
+            if L > best_len:
+                best, best_key, best_len = e, key, L
+        best_len = min(best_len, len(tokens) - 1)
+        if best is None or best_len < self.min_hit:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.reused_tokens += best_len
+        self._entries.move_to_end(best_key)
+        return best, best_len
+
+    def insert(self, tokens, cache, nbytes: int):
+        """Remember ``cache`` as the prefill of ``tokens`` (LRU evict)."""
+        tokens = np.asarray(tokens, np.int32)
+        key = self._key(tokens)
+        if key in self._entries:            # refresh, don't duplicate
+            self._entries.move_to_end(key)
+            return
+        self._entries[key] = PrefixEntry(tokens=tokens, cache=cache,
+                                         nbytes=nbytes)
+        while len(self._entries) > self.cap:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def stats(self) -> dict:
+        return {"entries": len(self), "bytes": self.bytes, "hits": self.hits,
+                "misses": self.misses, "evictions": self.evictions,
+                "reused_tokens": self.reused_tokens}

@@ -1,0 +1,134 @@
+"""Admission control for the serving front-end: bounded queue + backpressure.
+
+When every engine slot is occupied, incoming requests wait here — FIFO by
+default, shortest-prompt-first with ``policy="spf"`` (the scheduling knob
+the ROADMAP asks for: short prompts prefill cheaply and free their slot
+sooner, cutting p50 ttft at a bounded fairness cost). The queue is bounded:
+beyond ``depth`` waiting requests the front-end stops accepting and rejects
+with a typed :class:`Overloaded` result instead of growing an unbounded
+backlog — overload must surface as fast failure, not as unbounded latency.
+
+Deadlines are enforced *in the queue* too: a request whose deadline passes
+while it waits is expired without ever touching the engine (no prefill work
+for a request nobody is waiting on).
+
+Pure Python, no jax — this module is the scheduling state machine the
+property suite (``tests/test_serve_properties.py``) drives against a
+slot-state oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+
+class Status(enum.Enum):
+    """Lifecycle states of a front-end request.
+
+    Exactly one terminal state is reached per request (property-tested):
+    ``DONE`` (all ``gen`` tokens), ``REJECTED`` (queue full at submit,
+    typed ``Overloaded`` result, zero engine work), ``EXPIRED`` (deadline
+    passed — partial tokens are kept), or ``CANCELLED`` (explicit caller
+    cancel — partial tokens are kept).
+    """
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    REJECTED = "rejected"
+    EXPIRED = "expired"
+    CANCELLED = "cancelled"
+
+
+TERMINAL = frozenset((Status.DONE, Status.REJECTED, Status.EXPIRED,
+                      Status.CANCELLED))
+
+
+@dataclasses.dataclass(frozen=True)
+class Overloaded:
+    """Typed backpressure result: the bounded queue was full at submit.
+
+    Carried on the rejected handle's ``result`` so callers can distinguish
+    "shed under overload" (retry elsewhere / later) from a served-but-failed
+    request without parsing strings.
+    """
+    rid: int
+    queue_depth: int
+
+    def __str__(self):
+        return (f"request {self.rid} rejected: queue full "
+                f"(depth {self.queue_depth})")
+
+
+class AdmissionQueue:
+    """Bounded waiting room between ``submit`` and a free engine slot.
+
+    Items must expose ``prompt_len`` and ``deadline`` attributes (the
+    front-end queues its request handles). ``push`` refuses items beyond
+    ``depth`` — the caller turns that into an :class:`Overloaded` result.
+
+    ``policy``:
+      - ``"fifo"`` — strict arrival order.
+      - ``"spf"`` — shortest-prompt-first: ``pop`` picks the waiting item
+        with the fewest prompt tokens (ties broken by arrival order, so
+        equal-length requests stay FIFO).
+    """
+
+    POLICIES = ("fifo", "spf")
+
+    def __init__(self, depth: int, policy: str = "fifo"):
+        if depth < 0:
+            raise ValueError(f"queue depth must be >= 0, got {depth}")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown queue policy {policy!r}; "
+                             f"known: {self.POLICIES}")
+        self.depth, self.policy = depth, policy
+        self._items: List = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __iter__(self):
+        return iter(self._items)
+
+    @property
+    def full(self) -> bool:
+        return len(self._items) >= self.depth
+
+    def push(self, item) -> bool:
+        """Enqueue ``item``; False (and no side effect) when full."""
+        if self.full:
+            return False
+        self._items.append(item)
+        return True
+
+    def pop(self):
+        """Next item to admit under the configured policy."""
+        if not self._items:
+            raise IndexError("pop from empty AdmissionQueue")
+        if self.policy == "spf":
+            i = min(range(len(self._items)),
+                    key=lambda j: self._items[j].prompt_len)
+        else:
+            i = 0
+        return self._items.pop(i)
+
+    def take_expired(self, now: float) -> List:
+        """Remove and return every waiting item whose deadline has passed
+        (``deadline <= now``); queue order of the survivors is preserved."""
+        expired = [it for it in self._items
+                   if it.deadline is not None and it.deadline <= now]
+        if expired:
+            self._items = [it for it in self._items
+                           if not (it.deadline is not None
+                                   and it.deadline <= now)]
+        return expired
+
+    def remove(self, item) -> bool:
+        """Remove a specific waiting item (explicit cancel); False if the
+        item is not queued."""
+        try:
+            self._items.remove(item)
+            return True
+        except ValueError:
+            return False

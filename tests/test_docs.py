@@ -127,3 +127,28 @@ def test_one_traversal_flags_documented():
     doc = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
     for f in ("--one-traversal", "--spec-margin"):
         assert f"`{f}`" in doc, f
+
+
+def test_frontend_flags_documented():
+    """The serving front-end flags must exist in the CLI and be documented
+    in cli.md AND covered by serving.md's Front-end section (belt-and-
+    braces on top of the generic coverage check)."""
+    flags = _serve_flags()
+    frontend = {"--queue-depth", "--deadline-ms", "--deadline-frac",
+                "--prefix-cache", "--prefix-len", "--spf"}
+    assert frontend <= flags, sorted(frontend - flags)
+    cli = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
+    for f in sorted(frontend):
+        assert f"`{f}`" in cli, f
+    serving = open(os.path.join(ROOT, "docs", "serving.md"),
+                   encoding="utf-8").read()
+    assert "## Front-end" in serving
+    for needle in ("Overloaded", "queue-depth", "prefix cache", "deadline"):
+        assert needle in serving, needle
+
+
+def test_readme_documents_subprocess_marker():
+    """README must explain deselecting the environment-sensitive
+    subprocess tests (`-m "not subprocess"`)."""
+    readme = open(os.path.join(ROOT, "README.md"), encoding="utf-8").read()
+    assert "not subprocess" in readme

@@ -101,6 +101,7 @@ def test_model_flops_scaling(shape_name, mult):
     assert mf == pytest.approx(mult * pc["active"] * toks)
 
 
+@pytest.mark.subprocess
 def test_cache_partition_specs_finds_batch_dim():
     """Stacked caches carry a leading reps dim — the batch dim must still be
     found and sharded (the §Perf G1 regression guard)."""

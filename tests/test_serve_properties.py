@@ -1,0 +1,534 @@
+"""Property-based slot-lifecycle tests for the serving front-end.
+
+The front-end's scheduling core (`ServeFrontend.step`) is engine-agnostic:
+it only touches the engine's slot surface (``free_slots`` / ``admit`` /
+``decode_step`` / ``retire`` / ``cancel`` / ``slots``). That lets this
+suite drive the *exact production scheduling code* with a pure-Python
+``FakeEngine`` (no jax, instant "decode") and a manual clock, against an
+independently written slot-state oracle, over >= 50 random action
+sequences per property (deterministic under the hypothesis shim — see
+``tests/hypothesis_shim.py``).
+
+Invariants checked on every sequence:
+  * every submitted request reaches **exactly one** terminal state
+    (DONE / REJECTED / EXPIRED / CANCELLED) — no lost or double retires;
+  * **no cross-request contamination**: request ``rid``'s tokens are
+    exactly the prefix of the sequence ``FakeEngine`` generates for
+    ``rid``, never another request's;
+  * DONE handles carry exactly ``gen`` tokens; EXPIRED/CANCELLED carry a
+    strict-prefix count; REJECTED carry none plus a typed ``Overloaded``;
+  * **no slot leak**: after draining, every engine slot is free and the
+    queue is empty;
+  * the front-end's admission order and per-request outcomes match the
+    oracle exactly (FIFO and shortest-prompt-first policies both).
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+import pytest
+
+from hypothesis_shim import given, settings, st
+from repro.serve.engine import Request
+from repro.serve.frontend import ServeFrontend
+from repro.serve.queue import Overloaded, Status, TERMINAL
+
+
+def fake_token(rid: int, i: int) -> int:
+    """The i-th token FakeEngine generates for request ``rid``. Injective
+    in (rid, i) so any cross-slot contamination is detectable."""
+    return rid * 1000 + i
+
+
+class _FakeSlot:
+    def __init__(self):
+        self.rid, self.remaining, self.out, self.req = -1, 0, [], None
+
+    @property
+    def free(self):
+        return self.req is None
+
+
+class _Completion:
+    def __init__(self, rid, tokens):
+        self.rid, self.tokens = rid, tokens
+
+
+class FakeEngine:
+    """Pure-Python stand-in exposing exactly the slot surface the
+    front-end uses. One decode_step == one token per active slot."""
+
+    class cfg:
+        name, family = "fake", "lm"
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.slots = [_FakeSlot() for _ in range(n_slots)]
+        self.admits = 0
+
+    def begin(self, t0=None):
+        self._t0 = t0
+
+    def prefix_eligible(self):
+        return False
+
+    def free_slots(self):
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def active_count(self):
+        return sum(not s.free for s in self.slots)
+
+    def admit(self, req, slot, prefix_cache=None):
+        s = self.slots[slot]
+        assert s.free, f"admit into occupied slot {slot}"
+        self.admits += 1
+        s.rid, s.req = req.rid, req
+        s.out = [fake_token(req.rid, 0)]          # "prefill" token
+        s.remaining = req.gen - 1
+
+    def decode_step(self):
+        retired = []
+        for i, s in enumerate(self.slots):
+            if s.free or s.remaining == 0:
+                continue
+            s.out.append(fake_token(s.rid, len(s.out)))
+            s.remaining -= 1
+            if s.remaining == 0:
+                retired.append(i)
+        return retired
+
+    def retire(self, slot):
+        s = self.slots[slot]
+        assert not s.free, f"retire of free slot {slot}"
+        comp = _Completion(s.rid, list(s.out))
+        s.rid, s.req, s.remaining = -1, None, 0
+        return comp
+
+    def cancel(self, slot):
+        s = self.slots[slot]
+        if s.free:
+            raise ValueError(f"cancel of free slot {slot}")
+        partial = list(s.out)
+        s.rid, s.req, s.remaining = -1, None, 0
+        return partial
+
+
+class ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ---------------------------------------------------------------------------
+# the oracle: an independent, dictionary-level model of the same semantics
+# ---------------------------------------------------------------------------
+
+class Oracle:
+    """Slot-state oracle. Deliberately re-derived from docs/serving.md
+    ("Front-end" section) rather than from frontend.py, with plain dicts:
+    divergence between the two implementations fails the property."""
+
+    def __init__(self, n_slots, depth, policy):
+        self.depth, self.policy = depth, policy
+        self.free = sorted(range(n_slots))
+        self.queue = []                     # rids, arrival order
+        self.running = {}                   # rid -> {slot, remaining, ntok,
+                                            #         deadline}
+        self.final = {}                     # rid -> (status, ntok)
+        self.reqs = {}                      # rid -> (gen, plen, deadline)
+        self.admit_log = []
+
+    def submit(self, rid, gen, plen, deadline, now):
+        self.reqs[rid] = (gen, plen, deadline)
+        if not self.queue and self.free:
+            self._admit(rid, now)
+        elif len(self.queue) < self.depth:
+            self.queue.append(rid)
+        else:
+            self.final[rid] = ("rejected", 0)
+
+    def _admit(self, rid, now):
+        gen, _plen, dl = self.reqs[rid]
+        if dl is not None and now >= dl:    # dead on arrival: no work
+            self.final[rid] = ("expired", 0)
+            return
+        self.admit_log.append(rid)
+        slot = self.free.pop(0)
+        if gen == 1:                        # completes at admit
+            self.final[rid] = ("done", 1)
+            self.free = sorted(self.free + [slot])
+        else:
+            self.running[rid] = dict(slot=slot, remaining=gen - 1,
+                                     ntok=1, deadline=dl)
+
+    def cancel(self, rid):
+        if rid in self.final:
+            return
+        if rid in self.queue:
+            self.queue.remove(rid)
+            self.final[rid] = ("cancelled", 0)
+        elif rid in self.running:
+            r = self.running.pop(rid)
+            self.free = sorted(self.free + [r["slot"]])
+            self.final[rid] = ("cancelled", r["ntok"])
+
+    def _pop_queue(self):
+        if self.policy == "spf":
+            i = min(range(len(self.queue)),
+                    key=lambda j: self.reqs[self.queue[j]][1])
+        else:
+            i = 0
+        return self.queue.pop(i)
+
+    def step(self, now):
+        for rid in [q for q in self.queue
+                    if self.reqs[q][2] is not None
+                    and self.reqs[q][2] <= now]:
+            self.queue.remove(rid)
+            self.final[rid] = ("expired", 0)
+        for rid, r in [(k, v) for k, v in self.running.items()
+                       if v["deadline"] is not None
+                       and now >= v["deadline"]]:
+            del self.running[rid]
+            self.free = sorted(self.free + [r["slot"]])
+            self.final[rid] = ("expired", r["ntok"])
+        while self.queue and self.free:
+            self._admit(self._pop_queue(), now)
+        retired = []
+        for rid, r in self.running.items():
+            r["ntok"] += 1
+            r["remaining"] -= 1
+            if r["remaining"] == 0:
+                retired.append(rid)
+        for rid in retired:
+            r = self.running.pop(rid)
+            self.free = sorted(self.free + [r["slot"]])
+            self.final[rid] = ("done", r["ntok"])
+
+
+# ---------------------------------------------------------------------------
+# random-sequence driver
+# ---------------------------------------------------------------------------
+
+STATUS_NAME = {Status.DONE: "done", Status.REJECTED: "rejected",
+               Status.EXPIRED: "expired", Status.CANCELLED: "cancelled"}
+
+
+def _run_sequence(seed, n_slots, depth, policy, n_actions=18,
+                  deadline_prob=0.35):
+    """Drive frontend (production code, FakeEngine) and oracle through the
+    same random action sequence; return both plus instrumentation."""
+    rng = random.Random(seed)
+    eng = FakeEngine(n_slots)
+    clk = ManualClock()
+    fe = ServeFrontend(eng, queue_depth=depth, policy=policy, clock=clk)
+    oracle = Oracle(n_slots, depth, policy)
+
+    terminal_log = []                       # (rid, status) exactly-once log
+    orig_finish = fe._finish
+
+    def logged_finish(h, status):
+        terminal_log.append((h.rid, status))
+        orig_finish(h, status)
+
+    fe._finish = logged_finish
+
+    admit_log = []                          # engine-admitted rids, in order
+    orig_admit = eng.admit
+
+    def logged_admit(req, slot, prefix_cache=None):
+        admit_log.append(req.rid)
+        orig_admit(req, slot, prefix_cache=prefix_cache)
+
+    eng.admit = logged_admit
+
+    rid = 0
+    for _ in range(n_actions):
+        act = rng.choices(("submit", "step", "advance", "cancel"),
+                          weights=(5, 3, 2, 1))[0]
+        if act == "submit":
+            gen = rng.randint(1, 5)
+            plen = rng.randint(1, 8)
+            deadline = (clk.t + rng.uniform(0.0, 6.0)
+                        if rng.random() < deadline_prob else None)
+            req = Request(rid=rid, tokens=np.arange(plen, dtype=np.int32),
+                          gen=gen, deadline=deadline)
+            fe.submit(req)
+            oracle.submit(rid, gen, plen, deadline, clk.t)
+            rid += 1
+        elif act == "step":
+            fe.step()
+            oracle.step(clk.t)
+        elif act == "advance":
+            clk.advance(rng.uniform(0.5, 3.0))
+        else:
+            if rid:
+                victim = rng.randrange(rid)
+                fe.cancel(victim)
+                oracle.cancel(victim)
+        assert len(fe._by_slot) <= n_slots
+
+    # drain: no deadline outlives a big jump, so every survivor terminates
+    clk.advance(1e6)
+    for _ in range(64):
+        busy = fe.step()
+        oracle.step(clk.t)
+        if not busy:
+            break
+    else:                                   # pragma: no cover - deadlock
+        raise AssertionError("front-end failed to drain in 64 steps")
+    return fe, eng, oracle, terminal_log, admit_log
+
+
+def _check_invariants(fe, eng, oracle, terminal_log, admit_log):
+    # -- no slot leak, queue drained
+    assert all(s.free for s in eng.slots)
+    assert not fe._by_slot and len(fe.queue) == 0
+
+    # -- exactly one terminal transition per request
+    rids = [r for r, _ in terminal_log]
+    assert sorted(rids) == sorted(set(rids)), \
+        f"double terminal transition: {terminal_log}"
+    assert sorted(rids) == sorted(fe.handles), \
+        "some request never reached a terminal state"
+
+    # -- admission order parity with the oracle
+    assert admit_log == oracle.admit_log, \
+        f"admit order diverged: {admit_log} vs oracle {oracle.admit_log}"
+
+    for rid, h in fe.handles.items():
+        assert h.finished, f"rid {rid} left in {h.status}"
+        status, ntok = oracle.final[rid]
+        assert STATUS_NAME[h.status] == status, \
+            (f"rid {rid}: frontend {h.status} vs oracle {status}")
+        assert len(h.tokens) == ntok, \
+            (f"rid {rid}: {len(h.tokens)} tokens vs oracle {ntok}")
+        # -- attribution: tokens are exactly rid's own stream prefix
+        assert h.tokens == [fake_token(rid, i)
+                            for i in range(len(h.tokens))], \
+            f"rid {rid}: contaminated tokens {h.tokens}"
+        if h.status is Status.DONE:
+            assert len(h.tokens) == h.req.gen
+        elif h.status is Status.REJECTED:
+            assert h.tokens == []
+            assert isinstance(h.result, Overloaded)
+            assert h.result.queue_depth == fe.queue.depth
+        else:                               # EXPIRED / CANCELLED
+            assert len(h.tokens) < h.req.gen
+
+
+@settings(max_examples=60)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n_slots=st.integers(min_value=1, max_value=3),
+       depth=st.integers(min_value=0, max_value=4),
+       policy=st.sampled_from(("fifo", "spf")))
+def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy):
+    """>= 50 random action sequences: production scheduler == oracle."""
+    _check_invariants(*_run_sequence(seed, n_slots, depth, policy))
+
+
+@settings(max_examples=60)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n_slots=st.integers(min_value=1, max_value=4),
+       depth=st.integers(min_value=0, max_value=6))
+def test_burst_admission_counts(seed, n_slots, depth):
+    """All-at-once burst: accepted == slots + depth, rest rejected with a
+    typed Overloaded, and every accepted request completes. (gen >= 2 so
+    no request completes *at admit* and frees its slot mid-burst — that
+    legitimately raises the accept count.)"""
+    rng = random.Random(seed)
+    n = n_slots + depth + rng.randint(1, 6)
+    eng = FakeEngine(n_slots)
+    clk = ManualClock()
+    fe = ServeFrontend(eng, queue_depth=depth, clock=clk)
+    hs = [fe.submit(Request(rid=i,
+                            tokens=np.arange(rng.randint(1, 6),
+                                             dtype=np.int32),
+                            gen=rng.randint(2, 4)))
+          for i in range(n)]
+    rejected = [h for h in hs if h.status is Status.REJECTED]
+    assert len(rejected) == n - n_slots - depth
+    assert all(isinstance(h.result, Overloaded) for h in rejected)
+    for _ in range(256):
+        if not fe.step():
+            break
+    for h in hs:
+        if h not in rejected:
+            assert h.status is Status.DONE
+            assert len(h.tokens) == h.req.gen
+
+
+@settings(max_examples=60)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_fifo_queue_admits_in_submit_order(seed):
+    """Single slot, FIFO: queued requests are admitted strictly in submit
+    order (checked via FakeEngine's admit counter)."""
+    rng = random.Random(seed)
+    eng = FakeEngine(1)
+    fe = ServeFrontend(eng, queue_depth=8, clock=ManualClock())
+    order = []
+    real_admit = eng.admit
+
+    def spy(req, slot, prefix_cache=None):
+        order.append(req.rid)
+        real_admit(req, slot, prefix_cache=prefix_cache)
+
+    eng.admit = spy
+    n = rng.randint(3, 8)
+    for i in range(n):
+        fe.submit(Request(rid=i, tokens=np.arange(2, dtype=np.int32),
+                          gen=rng.randint(2, 4)))
+    while fe.step():
+        pass
+    assert order == sorted(order) == list(range(min(n, 1 + 8)))
+
+
+def test_spf_prefers_short_prompts():
+    """spf pops the shortest waiting prompt; FIFO pops arrival order."""
+    for policy, expect in (("fifo", [0, 1, 2, 3]), ("spf", [0, 3, 2, 1])):
+        eng = FakeEngine(1)
+        fe = ServeFrontend(eng, queue_depth=8, policy=policy,
+                           clock=ManualClock())
+        order = []
+        real_admit = eng.admit
+        eng.admit = (lambda req, slot, prefix_cache=None:
+                     (order.append(req.rid),
+                      real_admit(req, slot, prefix_cache=prefix_cache)))
+        for rid, plen in enumerate((2, 8, 5, 3)):   # rid 0 admits directly
+            fe.submit(Request(rid=rid,
+                              tokens=np.arange(plen, dtype=np.int32),
+                              gen=2))
+        while fe.step():
+            pass
+        assert order == expect, (policy, order)
+
+
+def test_double_finish_is_an_error():
+    """_finish asserts exactly-once terminal transitions."""
+    eng = FakeEngine(1)
+    fe = ServeFrontend(eng, queue_depth=2, clock=ManualClock())
+    h = fe.submit(Request(rid=0, tokens=np.arange(2, dtype=np.int32),
+                          gen=2))
+    while fe.step():
+        pass
+    assert h.status is Status.DONE
+    with pytest.raises(AssertionError, match="finalized twice"):
+        fe._finish(h, Status.CANCELLED)
+
+
+# ---------------------------------------------------------------------------
+# synthetic_trace seed-determinism contract (per-field substreams)
+# ---------------------------------------------------------------------------
+
+def _trace_fields(reqs):
+    return dict(
+        prompts=[r.tokens.tolist() for r in reqs],
+        gens=[r.gen for r in reqs],
+        arrivals=[r.arrival for r in reqs],
+        deadlines=[r.deadline for r in reqs],
+    )
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_trace_seed_fully_determinizes(seed):
+    """Same seed + same kwargs => identical trace, every field (prompt
+    tokens, gens, Poisson arrival gaps, deadlines)."""
+    from repro.serve import synthetic_trace
+    kw = dict(prompt_range=(4, 12), gen_range=(2, 8), rate=25.0,
+              deadline_range=(0.1, 2.0), deadline_frac=0.7)
+    a = _trace_fields(synthetic_trace(12, 101, seed=seed, **kw))
+    b = _trace_fields(synthetic_trace(12, 101, seed=seed, **kw))
+    assert a == b
+
+
+@settings(max_examples=50)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_trace_fields_draw_from_independent_substreams(seed):
+    """The regression the substream fix pins: toggling one knob must not
+    reshuffle the draws of an unrelated field (one shared RNG stream used
+    to couple every field through global draw order)."""
+    from repro.serve import synthetic_trace
+    base = dict(prompt_range=(4, 12), gen_range=(2, 8))
+    plain = synthetic_trace(10, 101, seed=seed, **base)
+    # turning Poisson arrivals on must not change lengths or tokens
+    timed = synthetic_trace(10, 101, seed=seed, rate=30.0, **base)
+    assert [r.tokens.tolist() for r in timed] == \
+           [r.tokens.tolist() for r in plain]
+    assert [r.gen for r in timed] == [r.gen for r in plain]
+    # adding deadlines must not perturb the arrival timeline
+    dl = synthetic_trace(10, 101, seed=seed, rate=30.0,
+                         deadline_range=(0.1, 1.0), **base)
+    assert [r.arrival for r in dl] == [r.arrival for r in timed]
+    # the deadline *mix* knob must not change surviving deadline values:
+    # budgets are drawn unconditionally, the frac only masks them
+    dl_all = synthetic_trace(10, 101, seed=seed, rate=30.0,
+                             deadline_range=(0.1, 1.0),
+                             deadline_frac=1.0, **base)
+    for sparse, dense in zip(dl, dl_all):
+        if sparse.deadline is not None:
+            assert sparse.deadline == dense.deadline
+
+
+def test_trace_prefix_len_prepends_shared_block():
+    """prefix_len prepends one shared system prompt; prompt_range sizes
+    the per-request suffix only."""
+    from repro.serve import synthetic_trace
+    reqs = synthetic_trace(6, 101, seed=9, prompt_range=(3, 7),
+                           prefix_len=16)
+    first = reqs[0].tokens[:16].tolist()
+    for r in reqs:
+        assert r.tokens[:16].tolist() == first
+        assert 3 <= len(r.tokens) - 16 <= 7
+    # suffixes differ (vocab 101, 3+ tokens: collision would be rare)
+    assert len({r.tokens[16:].tobytes() for r in reqs}) > 1
+
+
+# ---------------------------------------------------------------------------
+# unit coverage of the pure scheduling datastructures
+# ---------------------------------------------------------------------------
+
+def test_admission_queue_validation_and_removal():
+    from repro.serve.queue import AdmissionQueue
+    with pytest.raises(ValueError, match="depth"):
+        AdmissionQueue(-1)
+    with pytest.raises(ValueError, match="policy"):
+        AdmissionQueue(2, policy="lifo")
+    q = AdmissionQueue(2)
+    with pytest.raises(IndexError):
+        q.pop()
+
+    class Item:
+        prompt_len, deadline = 1, None
+
+    a, b = Item(), Item()
+    assert q.push(a) and list(q) == [a]
+    assert not q.remove(b)                  # b was never queued
+    assert q.remove(a) and len(q) == 0
+    assert q.push(a) and q.push(b) and q.full
+    assert not q.push(Item())               # bounded: refused, no effect
+    assert len(q) == 2
+
+
+def test_prefix_cache_validation_refresh_and_stats():
+    from repro.serve.prefix import PrefixCache, common_prefix_len
+    with pytest.raises(ValueError, match="cap"):
+        PrefixCache(cap=0)
+    assert common_prefix_len(np.empty(0, np.int32),
+                             np.arange(3, dtype=np.int32)) == 0
+    pc = PrefixCache(cap=2, min_hit=2)
+    t = np.arange(6, dtype=np.int32)
+    pc.insert(t, cache="c", nbytes=10)
+    pc.insert(t, cache="c2", nbytes=99)     # duplicate: refresh, keep first
+    assert len(pc) == 1 and pc.bytes == 10
+    hit = pc.lookup(np.concatenate([t[:4], np.array([9], np.int32)]))
+    assert hit is not None and hit[1] == 4
+    assert pc.lookup(np.array([8, 8, 8], np.int32)) is None   # miss
+    s = pc.stats()
+    assert s["hits"] == 1 and s["misses"] == 1 and s["entries"] == 1

@@ -104,6 +104,7 @@ print('OK')
     assert "OK" in out
 
 
+@pytest.mark.subprocess
 def test_mini_dryrun_multipod_axes():
     """A (2,2,2) pod/data/model mesh must lower+compile a reduced train step
     (proves the 'pod' axis shards end-to-end)."""
