@@ -33,7 +33,25 @@ Front-end gates (ISSUE 6):
             cached must beat a cold full prefill on median ttft (printed
             as the prefix-hit vs cold table).
 
+Fleet gates (ISSUE 7):
+
+  routed 4x >= 3x single — a 4-replica ReplicaRouter over fixed-cost
+            fake engines (each decode step sleeps a known wall time) must
+            reach at least 3x one replica's throughput on the same ragged
+            trace: the router steps replicas concurrently, so N decode
+            steps cost ~one step of wall time. FakeEngine-backed so the
+            gate is meaningful on CPU CI.
+
+  routed == engine — greedy streams served through a 2-replica fleet of
+            real engines must be token-identical to a single engine
+            serving the same trace (routing cannot change the math).
+
+  drain — draining a replica mid-trace completes its in-flight requests,
+            admits nothing new to it afterwards, and keeps p99 latency
+            bounded by the run's wall time.
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_serve.py
+      (--table-out routed_trace.md writes the routed-trace p50/p99 table)
 """
 from __future__ import annotations
 
@@ -50,10 +68,12 @@ import jax  # noqa: E402
 from benchmarks.common import calib_lm, params_of, trained_lm  # noqa: E402
 from repro.core import PruneConfig, corp_prune  # noqa: E402
 from repro.models import build_model  # noqa: E402
-from repro.serve import (PrefixCache, ServeEngine,  # noqa: E402
-                         ServeFrontend, Status, percentile_table,
+from repro.serve import (PrefixCache, ReplicaRouter,  # noqa: E402
+                         ServeEngine, ServeFrontend, Status,
+                         frontend_table, percentile_table,
                          run_static_trace, synthetic_trace)
 from repro.serve.engine import Request, format_table  # noqa: E402
+from repro.serve.testing import FleetFakeEngine  # noqa: E402
 
 SLOTS = 4
 MAX_LEN = 128
@@ -105,7 +125,6 @@ def gate_overload(model, params, vocab):
     t0 = time.perf_counter()
     handles = fe.run(trace)
     wall = time.perf_counter() - t0
-    from repro.serve import frontend_table
     tab = frontend_table(handles, wall)
     print(format_table([tab], ["requests", "done", "rejected", "tokens",
                                "ttft_p50_ms", "ttft_p99_ms"]))
@@ -151,10 +170,109 @@ def gate_prefix_ttft(model, params):
           f"({pc.stats()['reused_tokens']} tokens reused)")
 
 
+def _fake_fleet_run(n_replicas, trace, *, slots, step_time):
+    """Serve ``trace`` through ``n_replicas`` fixed-cost fake engines
+    behind the router (1 replica = bare engine) and return the
+    percentile table."""
+    engines = [FleetFakeEngine(slots, step_time=step_time)
+               for _ in range(n_replicas)]
+    eng = engines[0] if n_replicas == 1 else ReplicaRouter(engines)
+    fe = ServeFrontend(eng, queue_depth=len(trace))
+    t0 = time.perf_counter()
+    handles = fe.run(trace)
+    wall = time.perf_counter() - t0
+    assert all(h.status is Status.DONE for h in handles)
+    return frontend_table(handles, wall)
+
+
+def gate_fleet_throughput(table_out=None):
+    """Routed N=4 fleet must reach >= 3x a single replica's throughput
+    on the same ragged trace (fixed-cost fake decode steps, so the gate
+    measures router concurrency, not device speed)."""
+    # step_time dominates per-step python/thread-dispatch overhead, so
+    # the ratio reflects concurrent replica stepping, not interpreter cost
+    slots, step_time = 4, 8e-3
+    trace = synthetic_trace(64, 256, seed=3, prompt_range=(4, 12),
+                            gen_range=(16, 48))       # all arrive at t=0
+    single = _fake_fleet_run(1, trace, slots=slots, step_time=step_time)
+    fleet = _fake_fleet_run(4, trace, slots=slots, step_time=step_time)
+    single["mode"], fleet["mode"] = "single", "routed-x4"
+    keys = ["mode", "requests", "tokens", "tok_per_s", "lat_p50_ms",
+            "lat_p99_ms", "ttft_p50_ms", "ttft_p99_ms"]
+    table = format_table([single, fleet], keys)
+    print(table)
+    if table_out:
+        with open(table_out, "w") as f:
+            f.write("# Routed-trace latency (4-replica fleet vs single "
+                    "replica, fixed-cost fake engines)\n\n" + table + "\n")
+        print(f"[bench_serve] routed-trace table -> {table_out}")
+    ratio = fleet["tok_per_s"] / single["tok_per_s"]
+    assert ratio >= 3.0, (
+        f"routed x4 fleet below 3x single-replica throughput: "
+        f"{fleet['tok_per_s']:.0f} vs {single['tok_per_s']:.0f} tok/s "
+        f"({ratio:.2f}x)")
+    print(f"[bench_serve] GATE routed 4x >= 3x single: "
+          f"{fleet['tok_per_s']:.0f} >= 3x {single['tok_per_s']:.0f} "
+          f"tok/s ({ratio:.2f}x)")
+
+
+def gate_fleet_parity(model, params, trace, comps_engine):
+    """Streams through a 2-replica fleet of real engines must be
+    token-identical to one engine serving the same trace."""
+    import numpy as np
+    engines = []
+    for _ in range(2):
+        e = ServeEngine(model, params, n_slots=SLOTS, max_len=MAX_LEN)
+        e.warmup(prompt_lens=[len(r.tokens) for r in trace])
+        engines.append(e)
+    router = ReplicaRouter(engines)
+    handles = ServeFrontend(router, queue_depth=len(trace)).run(trace)
+    by_rid = {c.rid: c for c in comps_engine}
+    for h in handles:
+        assert h.status is Status.DONE, f"rid {h.rid} ended {h.status}"
+        assert h.tokens == list(np.asarray(by_rid[h.rid].tokens)), (
+            f"routed stream diverged from single engine on rid {h.rid}")
+    spread = [e.stats["admits"] for e in engines]
+    assert all(s > 0 for s in spread), f"one-sided routing: {spread}"
+    print(f"[bench_serve] GATE routed == engine: {len(handles)} streams "
+          f"token-identical across a 2-replica fleet (admits {spread})")
+
+
+def gate_drain():
+    """Drain completes in-flight, admits nothing new to the drained
+    replica, and keeps p99 latency bounded by the run's wall time."""
+    trace = synthetic_trace(16, 256, seed=4, prompt_range=(4, 8),
+                            gen_range=(8, 16))
+    engines = [FleetFakeEngine(2, step_time=1e-3) for _ in range(2)]
+    router = ReplicaRouter(engines)
+    fe = ServeFrontend(router, queue_depth=len(trace))
+    handles = [fe.submit(r) for r in trace]
+    t0 = time.perf_counter()
+    fe.step()                                # first slots bound + stepped
+    router.drain(0)
+    admits0 = engines[0].stats["admits"]
+    while not all(h.finished for h in handles):
+        fe.step()
+    wall = time.perf_counter() - t0
+    assert all(h.status is Status.DONE for h in handles)
+    assert engines[0].stats["admits"] == admits0, (
+        f"admissions to a draining replica: {engines[0].stats['admits']} "
+        f"> {admits0}")
+    assert router.drained(0), "drained replica still reports in-flight"
+    tab = frontend_table(handles, wall)
+    assert tab["lat_p99_ms"] <= wall * 1e3, "p99 unbounded under drain"
+    print(f"[bench_serve] GATE drain: {tab['done']} served, "
+          f"{admits0} admits frozen on replica 0, drained(0)=True, "
+          f"p99 {tab['lat_p99_ms']:.1f} <= wall {wall * 1e3:.1f} ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--sparsity", type=float, default=0.5)
+    ap.add_argument("--table-out", default=None,
+                    help="write the routed-trace p50/p99 markdown table "
+                         "here (CI uploads it as an artifact)")
     args = ap.parse_args()
 
     cfg, model, params = trained_lm()
@@ -194,6 +312,11 @@ def main():
     gate_frontend_parity(model, params, trace, comps_c)
     gate_overload(model, params, cfg.vocab_size)
     gate_prefix_ttft(model, params)
+
+    # fleet gates (ISSUE 7)
+    gate_fleet_throughput(table_out=args.table_out)
+    gate_fleet_parity(model, params, trace, comps_c)
+    gate_drain()
 
     # dense vs pruned serving table
     print(f"[bench_serve] CORP prune @ {args.sparsity:.0%}")

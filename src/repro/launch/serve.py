@@ -86,7 +86,8 @@ def serve_loop(model, params, *, batch, prompt_len, gen, max_len,
 def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                 rate=None, seed=0, compare_static=False, queue_depth=16,
                 deadline_ms=None, deadline_frac=1.0, prefix_cache=0,
-                prefix_len=0, spf=False, log=print):
+                prefix_len=0, spf=False, replicas=1, route="least-loaded",
+                log=print):
     """Async front-end + continuous-batching engine over a synthetic trace.
 
     The trace drives the full serving stack: Poisson arrivals (``rate``),
@@ -95,10 +96,18 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
     shortest-prompt-first), and optional prefix-cache reuse of a shared
     ``prefix_len``-token system prompt. Overload surfaces as typed
     rejections in the table, never as a deadlock.
+
+    With ``replicas > 1`` the trace is served by a fleet of engines behind
+    a :class:`~repro.serve.ReplicaRouter` (``route`` picks the policy);
+    the front-end layers on the router exactly as it layers on one engine.
+    Prefix caching in routed mode is per-replica and owned by the router
+    (``route=prefix-affinity``); the front-end's shared cache is
+    single-engine only.
     """
-    from repro.serve import (PrefixCache, ServeEngine, ServeFrontend,
-                             frontend_table, percentile_table,
-                             run_static_trace, synthetic_trace)
+    from repro.serve import (PrefixCache, ReplicaRouter, ServeEngine,
+                             ServeFrontend, frontend_table,
+                             percentile_table, run_static_trace,
+                             synthetic_trace)
     from repro.serve.engine import format_table
     cfg = model.cfg
     dl_range = None if deadline_ms is None else \
@@ -108,23 +117,36 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                             rate=rate, deadline_range=dl_range,
                             deadline_frac=deadline_frac,
                             prefix_len=prefix_len)
-    eng = ServeEngine(model, params, n_slots=slots, max_len=max_len)
-    eng.warmup(prompt_lens=[len(r.tokens) for r in trace],
-               prefix=prefix_cache > 0)
-    pc = PrefixCache(cap=prefix_cache) if prefix_cache > 0 else None
+    engines = [ServeEngine(model, params, n_slots=slots, max_len=max_len)
+               for _ in range(max(1, replicas))]
+    for e in engines:
+        e.warmup(prompt_lens=[len(r.tokens) for r in trace],
+                 prefix=prefix_cache > 0)
+    if replicas > 1:
+        eng = ReplicaRouter(engines, route=route, prefix_cap=prefix_cache)
+        pc = None
+    else:
+        eng = engines[0]
+        pc = PrefixCache(cap=prefix_cache) if prefix_cache > 0 else None
     fe = ServeFrontend(eng, queue_depth=queue_depth,
                        policy="spf" if spf else "fifo", prefix_cache=pc)
     t0 = time.perf_counter()
     handles = fe.run(trace, log=log)
     wall = time.perf_counter() - t0
     table = frontend_table(handles, wall)
-    table["mode"] = "frontend"
+    table["mode"] = f"fleet-x{replicas}" if replicas > 1 else "frontend"
     rows = [table]
     log(f"[serve] frontend: {eng.stats['admits']} admits, "
         f"{eng.stats['decode_steps']} decode steps, "
         f"lane utilization "
         f"{eng.stats['decode_lanes'] / max(1, eng.stats['decode_steps'] * slots):.0%}, "
         f"cache {eng.cache_bytes / 1e6:.2f} MB")
+    if replicas > 1:
+        log(f"[serve] router: {dict(eng.rstats)}; "
+            f"states {[s.value for s in eng.states]}")
+        if eng.prefix_stats() is not None:
+            for i, st in enumerate(eng.prefix_stats()):
+                log(f"[serve] replica {i} prefix cache: {st}")
     if pc is not None:
         log(f"[serve] prefix cache: {pc.stats()}")
     if compare_static:
@@ -134,9 +156,9 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
         ts = percentile_table(comps_s, max(c.t_done for c in comps_s))
         ts["mode"] = "static"
         rows.append(ts)
-    keys = ["mode", "requests", "done", "rejected", "expired", "tokens",
-            "tok_per_s", "lat_p50_ms", "lat_p99_ms", "ttft_p50_ms",
-            "ttft_p99_ms"]
+    keys = ["mode", "requests", "done", "rejected", "expired", "failed",
+            "tokens", "tok_per_s", "lat_p50_ms", "lat_p99_ms",
+            "ttft_p50_ms", "ttft_p99_ms"]
     log(format_table(rows, keys))
     return handles, table
 
@@ -184,6 +206,14 @@ def main():
                          "trace request (the prefix-cache workload)")
     ap.add_argument("--spf", action="store_true",
                     help="shortest-prompt-first admission instead of FIFO")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the ReplicaRouter; 1 "
+                         "serves through a single engine (no router)")
+    ap.add_argument("--route", default="least-loaded",
+                    choices=["least-loaded", "prefix-affinity"],
+                    help="fleet routing policy: fewest occupied slots, or "
+                         "longest cached prefix (per-replica caches; pure "
+                         "global-attention LMs only)")
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch)
@@ -207,7 +237,8 @@ def main():
                     queue_depth=args.queue_depth, deadline_ms=dl,
                     deadline_frac=args.deadline_frac,
                     prefix_cache=args.prefix_cache,
-                    prefix_len=args.prefix_len, spf=args.spf)
+                    prefix_len=args.prefix_len, spf=args.spf,
+                    replicas=args.replicas, route=args.route)
     else:
         serve_loop(model, params, batch=args.batch,
                    prompt_len=args.prompt_len, gen=args.gen,

@@ -11,9 +11,10 @@ from repro.serve.frontend import (AsyncServeFrontend, Handle, ServeFrontend,
                                   frontend_table)
 from repro.serve.prefix import PrefixCache
 from repro.serve.queue import AdmissionQueue, Overloaded, Status
+from repro.serve.router import ReplicaRouter, ReplicaState
 
 __all__ = ["SlotCache", "cache_bytes", "Request", "Completion",
            "ServeEngine", "run_static_trace", "synthetic_trace",
            "percentile_table", "ServeFrontend", "AsyncServeFrontend",
            "Handle", "frontend_table", "PrefixCache", "AdmissionQueue",
-           "Overloaded", "Status"]
+           "Overloaded", "Status", "ReplicaRouter", "ReplicaState"]

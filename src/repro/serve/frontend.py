@@ -167,6 +167,9 @@ class ServeFrontend:
     def step(self) -> bool:
         """One engine iteration; returns True while work remains."""
         now = self.clock()
+        # 0. fleet failures: a routing engine surfaces requests whose
+        #    replica died with no survivor to re-dispatch to
+        self._reap_failed()
         # 1. queued deadline expiry: never touches the engine
         for h in self.queue.take_expired(now):
             self._finish(h, Status.EXPIRED)
@@ -193,7 +196,23 @@ class ServeFrontend:
                 comp = self.engine.retire(slot)
                 h.tokens = [int(t) for t in comp.tokens]
                 self._finish(h, Status.DONE)
+            self._reap_failed()       # decode may have killed a replica
         return bool(self._by_slot) or len(self.queue) > 0
+
+    def _reap_failed(self):
+        """Finish FAILED any request a fleet engine reports as lost (its
+        replica died, no survivor absorbed the re-dispatch). Partial
+        tokens are kept; exactly-once like every other terminal. Engines
+        without a ``take_failed`` surface (the single-engine case) are
+        untouched."""
+        take = getattr(self.engine, "take_failed", None)
+        if take is None:
+            return
+        for slot, tokens in take():
+            h = self._by_slot.pop(slot, None)
+            if h is not None and not h.finished:
+                h.tokens = [int(t) for t in tokens]
+                self._finish(h, Status.FAILED)
 
     def _admit(self, h: Handle, slot: int):
         now = self.clock()
@@ -293,17 +312,29 @@ class AsyncServeFrontend:
 
     def _ensure_driver(self):
         if self._task is None or self._task.done():
+            # fresh, unset wake: a dead driver leaves _wake permanently
+            # set (its exit-path release), and Event.wait() on a set
+            # event returns without yielding — a stream polling it would
+            # livelock the loop and the new driver task would never run
+            self._wake = self._asyncio.Event()
             self._task = self._asyncio.ensure_future(self._drive())
 
     async def _drive(self):
+        # terminate on `not busy` alone: once the queue is empty and no
+        # slot is occupied there is nothing left to drive — in particular
+        # every handle reaching a terminal state implies it. The previous
+        # condition additionally required all handles finished, so any
+        # handle stranded outside queue/slots (or registered externally)
+        # left this task spinning forever: a leak, regression-tested via
+        # task introspection in tests/test_serve_frontend.py. A later
+        # submit restarts the driver (_ensure_driver checks task.done()).
         try:
             while True:
                 busy = self.frontend.step()
                 self._wake.set()
                 self._wake = self._asyncio.Event()
                 await self._asyncio.sleep(0)
-                if not busy and all(h.finished for h in
-                                    self.frontend.handles.values()):
+                if not busy:
                     return
         finally:
             self._wake.set()       # release any stragglers
@@ -340,6 +371,7 @@ def frontend_table(handles: List[Handle], wall: float) -> dict:
         "rejected": len(by[Status.REJECTED]),
         "expired": len(by[Status.EXPIRED]),
         "cancelled": len(by[Status.CANCELLED]),
+        "failed": len(by[Status.FAILED]),
         "tokens": int(sum(len(h.tokens) for h in handles)),
         "wall_s": wall,
         "tok_per_s": sum(len(h.tokens) for h in handles) / max(wall, 1e-9),

@@ -29,8 +29,10 @@ class Status(enum.Enum):
     Exactly one terminal state is reached per request (property-tested):
     ``DONE`` (all ``gen`` tokens), ``REJECTED`` (queue full at submit,
     typed ``Overloaded`` result, zero engine work), ``EXPIRED`` (deadline
-    passed — partial tokens are kept), or ``CANCELLED`` (explicit caller
-    cancel — partial tokens are kept).
+    passed — partial tokens are kept), ``CANCELLED`` (explicit caller
+    cancel — partial tokens are kept), or ``FAILED`` (fleet serving only:
+    the request's replica died and no survivor could absorb the
+    re-dispatch — partial tokens are kept; see serve/router.py).
     """
     QUEUED = "queued"
     RUNNING = "running"
@@ -38,10 +40,11 @@ class Status(enum.Enum):
     REJECTED = "rejected"
     EXPIRED = "expired"
     CANCELLED = "cancelled"
+    FAILED = "failed"
 
 
 TERMINAL = frozenset((Status.DONE, Status.REJECTED, Status.EXPIRED,
-                      Status.CANCELLED))
+                      Status.CANCELLED, Status.FAILED))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,164 @@
+"""Pure-Python fake engines for scheduler/router tests and CPU benches.
+
+``FleetFakeEngine`` exposes exactly the engine-agnostic slot surface the
+front-end and ``ReplicaRouter`` consume (``free_slots`` / ``admit`` /
+``decode_step`` / ``retire`` / ``cancel`` / ``begin`` / ``slots`` /
+``active_count``) with no jax anywhere, so fleet-level scheduling paths
+run instantly and deterministically on CI.
+
+Two properties matter for fleet tests:
+
+- **attributable tokens** — ``fleet_token(rid, i)`` is injective in
+  ``(rid, i)``, so any cross-replica or cross-request contamination is
+  detectable by value. Prompts in tests must stay below
+  ``FLEET_TOKEN_BASE`` so prompt tokens can never collide with generated
+  ones.
+- **greedy determinism, mimicked** — a real engine re-prefilled with
+  ``prompt + out[:-1]`` reproduces ``out[-1]`` exactly (argmax of the
+  same logits). The fake mimics that: when a prompt *ends with* one of
+  the rid's own generated tokens, the "prefill" continues the stream
+  from it instead of restarting at index 0. That is precisely the
+  router's re-dispatch contract, so replica-death tests exercise the
+  real overlap bookkeeping.
+
+Fault injection: set ``fail_next_admit = True`` to make the next admit
+raise (death during prefill), ``fail_next_decode = True`` for death
+mid-decode. ``step_time`` adds a per-``decode_step`` sleep (the whole
+fused step, lanes in parallel) so FakeEngine-backed throughput benches
+model a fleet of fixed-cost decode steps.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+FLEET_TOKEN_BASE = 10_000
+
+
+def fleet_token(rid: int, i: int) -> int:
+    """The i-th token a FleetFakeEngine generates for request ``rid``.
+    Injective in (rid, i); always >= FLEET_TOKEN_BASE."""
+    return (rid + 1) * FLEET_TOKEN_BASE + i
+
+
+class _FakeSlot:
+    def __init__(self):
+        self.rid, self.remaining, self.out, self.req = -1, 0, [], None
+        self._next = 0                     # next stream index to emit
+
+    @property
+    def free(self):
+        return self.req is None
+
+
+class _FakeCompletion:
+    def __init__(self, rid, tokens):
+        self.rid, self.tokens = rid, tokens
+
+
+class _FakeCfg:
+    name, family = "fleet-fake", "lm"
+    vocab_size = 1 << 30
+
+
+class FleetFakeEngine:
+    """Engine-surface fake: one ``decode_step`` = one token per active
+    slot, ``step_time`` seconds of (GIL-releasing) wall time per step."""
+
+    cfg = _FakeCfg()
+
+    def __init__(self, n_slots: int, *, step_time: float = 0.0,
+                 prefix_ok: bool = False):
+        self.n_slots = n_slots
+        self.step_time = step_time
+        self._prefix_ok = prefix_ok
+        self.slots = [_FakeSlot() for _ in range(n_slots)]
+        self.stats = {"admits": 0, "decode_steps": 0, "cancels": 0}
+        self.fail_next_admit = False
+        self.fail_next_decode = False
+        self.cache_bytes = 0
+
+    def begin(self, t0: Optional[float] = None):
+        self._t0 = t0
+
+    def prefix_eligible(self) -> bool:
+        return self._prefix_ok
+
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def active_count(self) -> int:
+        return sum(not s.free for s in self.slots)
+
+    def _start_index(self, req) -> int:
+        """Greedy-determinism mimicry: a prompt ending in one of rid's
+        own generated tokens (index ``i``) is a re-dispatch
+        continuation, so the 'prefill' emits stream token ``i + 1`` —
+        exactly what a real engine's argmax reproduces when re-prefilled
+        with ``prompt + out[:-1]``. Fresh prompts start at index 0."""
+        t = int(req.tokens[-1])
+        if t >= FLEET_TOKEN_BASE:
+            rid, i = divmod(t, FLEET_TOKEN_BASE)
+            if rid - 1 == req.rid:
+                return i + 1
+        return 0
+
+    def admit(self, req, slot: int, prefix_cache=None):
+        if self.fail_next_admit:
+            self.fail_next_admit = False
+            raise RuntimeError("injected admit failure")
+        s = self.slots[slot]
+        assert s.free, f"admit into occupied slot {slot}"
+        self.stats["admits"] += 1
+        i0 = self._start_index(req)
+        s.rid, s.req = req.rid, req
+        s.out = [fleet_token(req.rid, i0)]        # the "prefill" token
+        s._next = i0 + 1
+        s.remaining = req.gen - 1
+
+    def decode_step(self) -> List[int]:
+        if self.fail_next_decode:
+            self.fail_next_decode = False
+            raise RuntimeError("injected decode failure")
+        if self.step_time:
+            time.sleep(self.step_time)             # releases the GIL
+        self.stats["decode_steps"] += 1
+        retired = []
+        for i, s in enumerate(self.slots):
+            if s.free or s.remaining == 0:
+                continue
+            s.out.append(fleet_token(s.rid, s._next))
+            s._next += 1
+            s.remaining -= 1
+            if s.remaining == 0:
+                retired.append(i)
+        return retired
+
+    def retire(self, slot: int) -> _FakeCompletion:
+        s = self.slots[slot]
+        assert not s.free, f"retire of free slot {slot}"
+        comp = _FakeCompletion(s.rid, list(s.out))
+        s.rid, s.req, s.remaining = -1, None, 0
+        return comp
+
+    def cancel(self, slot: int) -> List[int]:
+        s = self.slots[slot]
+        if s.free:
+            raise ValueError(f"cancel of free slot {slot}")
+        partial = list(s.out)
+        s.rid, s.req, s.remaining = -1, None, 0
+        self.stats["cancels"] += 1
+        return partial
+
+
+class ManualClock:
+    """Injectable front-end clock for deterministic deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float):
+        self.t += dt

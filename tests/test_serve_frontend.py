@@ -23,6 +23,7 @@ from repro.serve import (AsyncServeFrontend, Overloaded, PrefixCache,
                          ServeEngine, ServeFrontend, Status, frontend_table,
                          synthetic_trace)
 from repro.serve.engine import Request
+from repro.serve.testing import FleetFakeEngine
 
 
 @pytest.fixture(scope="module")
@@ -243,6 +244,63 @@ def test_async_streams_interleave(lm):
     # genuinely interleaved: B streams a token before A's stream ends
     last_a = len(order) - 1 - order[::-1].index("A")
     assert order.index("B") < last_a, order
+
+
+def test_async_driver_task_terminates_when_idle():
+    """Regression: the driver task must end (not leak) once every handle
+    is terminal and the queue is empty — and restart on a later submit.
+    Pure-Python fake engine + injectable clock keep it deterministic."""
+    fe = ServeFrontend(FleetFakeEngine(2), queue_depth=4,
+                       clock=ManualClock())
+    afe = AsyncServeFrontend(fe)
+
+    def req(rid, gen):
+        return Request(rid=rid, tokens=np.arange(1, 4, dtype=np.int32),
+                       gen=gen)
+
+    async def main():
+        h0 = await afe.submit(req(0, 3))
+        h1 = await afe.submit(req(1, 2))
+        assert len([t async for t in afe.stream(h0)]) == 3
+        for _ in range(8):                  # let the driver observe idle
+            await asyncio.sleep(0)
+        assert h0.finished and h1.finished
+        assert afe._task is not None and afe._task.done(), \
+            "driver task leaked after all handles terminal + queue empty"
+        h2 = await afe.submit(req(2, 2))    # restarts the driver
+        assert not afe._task.done()
+        assert len([t async for t in afe.stream(h2)]) == 2
+        for _ in range(8):
+            await afe._asyncio.sleep(0)
+        assert afe._task.done()
+
+    asyncio.run(main())
+
+
+def test_async_driver_terminates_despite_stranded_handle():
+    """The exact leak the fix pins: the old exit condition also required
+    *every known handle* to be finished, so an unfinished handle stranded
+    outside queue/slots kept the driver spinning forever. `not busy`
+    alone must end the task."""
+    fe = ServeFrontend(FleetFakeEngine(1), queue_depth=4,
+                       clock=ManualClock())
+    afe = AsyncServeFrontend(fe)
+
+    async def main():
+        h = await afe.submit(Request(
+            rid=0, tokens=np.arange(1, 4, dtype=np.int32), gen=5))
+        # strand it: free the slot behind the front-end's back, so the
+        # handle can never reach a terminal state
+        slot = next(iter(fe._by_slot))
+        fe._by_slot.pop(slot)
+        s = fe.engine.slots[slot]
+        s.rid, s.req, s.remaining = -1, None, 0
+        for _ in range(8):
+            await asyncio.sleep(0)
+        assert not h.finished
+        assert afe._task.done(), "driver spun forever on stranded handle"
+
+    asyncio.run(main())
 
 
 # ---------------------------------------------------------------------------

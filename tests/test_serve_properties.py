@@ -516,6 +516,257 @@ def test_admission_queue_validation_and_removal():
     assert len(q) == 2
 
 
+# ---------------------------------------------------------------------------
+# fleet properties: ReplicaRouter vs an independent fleet oracle
+# ---------------------------------------------------------------------------
+#
+# The router speaks the same engine-agnostic slot surface it consumes, so
+# the production router code is driven directly (a thin admission loop
+# standing in for the front-end's ``free_slots()[0]`` choice) over
+# pure-Python ``FleetFakeEngine`` replicas, against a dict-level fleet
+# oracle re-derived from docs/serving.md ("Multi-replica routing").
+# Invariants per sequence: exactly-once terminal status across replicas,
+# least-loaded admit parity with the oracle argmin (tie-break by replica
+# index), no slot leaks on any live replica, and no cross-replica token
+# contamination (fleet_token attribution).
+
+from repro.serve import ReplicaRouter, ReplicaState  # noqa: E402
+from repro.serve.testing import FleetFakeEngine, fleet_token  # noqa: E402
+
+
+class FleetOracle:
+    """Dict-level model of the fleet scheduler: least-loaded argmin with
+    replica-index tie-break, FIFO re-dispatch of orphans (ordered by
+    virtual slot id, as the router's orphan scan is), FAILED only when no
+    UP replica remains, draining replicas excluded from admission."""
+
+    def __init__(self, n_replicas, slots_per):
+        self.state = ["up"] * n_replicas
+        self.cap = [slots_per] * n_replicas
+        self.occ = [0] * n_replicas
+        self.running = {}     # rid -> {replica|None, ntok, remaining, gid}
+        self.pending = []     # [(gid, rid)] FIFO
+        self.final = {}       # rid -> (status, ntok)
+        self.admit_log = []   # (rid, replica), fresh admits + re-dispatches
+
+    def capacity(self):
+        free = sum(self.cap[i] - self.occ[i]
+                   for i in range(len(self.cap)) if self.state[i] == "up")
+        return max(0, free - len(self.pending))
+
+    def _argmin(self):
+        cand = [i for i in range(len(self.cap))
+                if self.state[i] == "up" and self.occ[i] < self.cap[i]]
+        return min(cand, key=lambda i: (self.occ[i], i)) if cand else None
+
+    def submit(self, rid, gen, gid):
+        i = self._argmin()
+        self.admit_log.append((rid, i))
+        if gen == 1:                        # completes at admit
+            self.final[rid] = ("done", 1)
+            return
+        self.occ[i] += 1
+        self.running[rid] = dict(replica=i, ntok=1, remaining=gen - 1,
+                                 gid=gid)
+
+    def cancel(self, rid):
+        if rid in self.final:
+            return
+        r = self.running.pop(rid)
+        if r["replica"] is not None:
+            self.occ[r["replica"]] -= 1
+        else:
+            self.pending = [(g, q) for g, q in self.pending if q != rid]
+        self.final[rid] = ("cancelled", r["ntok"])
+
+    def kill(self, i):
+        if self.state[i] == "down":
+            return
+        self.state[i] = "down"
+        orphans = sorted(
+            (rid for rid, r in self.running.items() if r["replica"] == i),
+            key=lambda rid: self.running[rid]["gid"])
+        for rid in orphans:
+            self.running[rid]["replica"] = None
+            self.pending.append((self.running[rid]["gid"], rid))
+        self.occ[i] = 0
+
+    def drain(self, i):
+        if self.state[i] == "up":
+            self.state[i] = "draining"
+
+    def step(self):
+        while self.pending:                 # re-dispatch, FIFO
+            gid, rid = self.pending[0]
+            if not any(s == "up" for s in self.state):
+                self.pending.pop(0)
+                r = self.running.pop(rid)
+                self.final[rid] = ("failed", r["ntok"])
+                continue
+            i = self._argmin()
+            if i is None:
+                break                       # survivors busy: keep waiting
+            self.pending.pop(0)
+            self.admit_log.append((rid, i))
+            self.running[rid]["replica"] = i
+            self.occ[i] += 1
+        done = []
+        for rid, r in self.running.items():
+            if r["replica"] is None:
+                continue
+            r["ntok"] += 1
+            r["remaining"] -= 1
+            if r["remaining"] == 0:
+                done.append(rid)
+        for rid in done:
+            r = self.running.pop(rid)
+            self.occ[r["replica"]] -= 1
+            self.final[rid] = ("done", r["ntok"])
+
+
+def _run_fleet_sequence(seed, n_replicas, slots_per, n_actions=22):
+    """Drive the production ReplicaRouter and the fleet oracle through the
+    same random submit/step/cancel/kill/drain sequence."""
+    rng = random.Random(seed)
+    engines = [FleetFakeEngine(slots_per) for _ in range(n_replicas)]
+    router = ReplicaRouter(engines)
+    oracle = FleetOracle(n_replicas, slots_per)
+
+    admit_log = []                          # (rid, replica), success order
+    for ri, e in enumerate(engines):
+        def spy(req, slot, prefix_cache=None, _orig=e.admit, _ri=ri):
+            _orig(req, slot, prefix_cache=prefix_cache)
+            admit_log.append((req.rid, _ri))
+        e.admit = spy
+
+    record = {}                             # rid -> {gid,status,tokens,gen}
+    gid_rid = {}                            # live gid -> rid
+
+    def finish(r_id, status, tokens):
+        rec = record[r_id]
+        assert rec["status"] is None, f"double terminal for rid {r_id}"
+        rec["status"], rec["tokens"] = status, [int(t) for t in tokens]
+        gid_rid.pop(rec["gid"], None)
+
+    def do_step():
+        for gid in router.decode_step():
+            comp = router.retire(gid)
+            finish(gid_rid[gid], "done", comp.tokens)
+        for gid, toks in router.take_failed():
+            finish(gid_rid[gid], "failed", toks)
+        oracle.step()
+
+    rid = 0
+    for _ in range(n_actions):
+        act = rng.choices(("submit", "step", "cancel", "kill", "drain"),
+                          weights=(5, 4, 1, 1, 1))[0]
+        if act == "submit":
+            free = router.free_slots()
+            if not free:
+                assert oracle.capacity() == 0
+                continue
+            gid = free[0]                   # the front-end's choice
+            gen, plen = rng.randint(1, 5), rng.randint(1, 6)
+            record[rid] = dict(gid=gid, status=None, tokens=None, gen=gen)
+            gid_rid[gid] = rid
+            router.admit(Request(rid=rid,
+                                 tokens=np.arange(plen, dtype=np.int32),
+                                 gen=gen), gid)
+            oracle.submit(rid, gen, gid)
+            if router.slots[gid].remaining == 0:    # gen==1 instant done
+                finish(rid, "done", router.retire(gid).tokens)
+            rid += 1
+        elif act == "step":
+            do_step()
+        elif act == "cancel":
+            if not rid:
+                continue
+            victim = rng.randrange(rid)
+            if record[victim]["status"] is None:
+                finish(victim, "cancelled",
+                       router.cancel(record[victim]["gid"]))
+            oracle.cancel(victim)
+        elif act == "kill":
+            i = rng.randrange(n_replicas)
+            router.kill(i)
+            oracle.kill(i)
+        else:
+            i = rng.randrange(n_replicas)
+            router.drain(i)
+            oracle.drain(i)
+        assert len(router.free_slots()) == oracle.capacity(), \
+            "fleet capacity diverged from oracle"
+
+    for _ in range(300):                    # drain every survivor
+        if router.active_count() == 0:
+            break
+        do_step()
+    else:                                   # pragma: no cover - deadlock
+        raise AssertionError("fleet failed to drain in 300 steps")
+    return router, engines, oracle, record, admit_log
+
+
+def _check_fleet_invariants(router, engines, oracle, record, admit_log):
+    # -- no slot leak on any live replica; every virtual slot released
+    for rep, e in zip(router.replicas, engines):
+        if rep.state is not ReplicaState.DOWN:
+            assert all(s.free for s in e.slots), "physical slot leak"
+    assert all(v.free for v in router.vslots), "virtual slot leak"
+    assert not router._pending and not router._failed
+
+    # -- least-loaded parity: every admit (fresh + re-dispatch) landed on
+    #    the oracle's argmin replica, in the same order
+    assert admit_log == oracle.admit_log, \
+        f"routing diverged: {admit_log} vs oracle {oracle.admit_log}"
+
+    # -- exactly one terminal per request, matching the oracle
+    assert set(record) == set(oracle.final)
+    for rid, rec in record.items():
+        status, ntok = oracle.final[rid]
+        assert rec["status"] == status, \
+            (f"rid {rid}: router {rec['status']} vs oracle {status}")
+        assert len(rec["tokens"]) == ntok, \
+            (f"rid {rid}: {len(rec['tokens'])} tokens vs oracle {ntok}")
+        # -- attribution: exactly rid's own stream, no cross-replica mix
+        assert rec["tokens"] == [fleet_token(rid, i) for i in range(ntok)],\
+            f"rid {rid}: contaminated tokens {rec['tokens']}"
+        if status == "done":
+            assert ntok == rec["gen"]
+
+    # -- a draining replica with nothing in flight reports removable
+    for i, rep in enumerate(router.replicas):
+        if rep.state is ReplicaState.DRAINING:
+            assert router.drained(i)
+
+
+@settings(max_examples=60)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n_replicas=st.integers(min_value=1, max_value=3),
+       slots_per=st.integers(min_value=1, max_value=2))
+def test_fleet_lifecycle_matches_oracle(seed, n_replicas, slots_per):
+    """>= 60 random submit/step/cancel/kill/drain sequences: production
+    router == fleet oracle (statuses, token counts, routing argmin)."""
+    _check_fleet_invariants(
+        *_run_fleet_sequence(seed, n_replicas, slots_per))
+
+
+def test_least_loaded_tie_breaks_by_replica_index():
+    """Equal load routes to the lowest replica index, deterministically."""
+    engines = [FleetFakeEngine(2) for _ in range(3)]
+    router = ReplicaRouter(engines)
+    landed = []
+    for ri, e in enumerate(engines):
+        def spy(req, slot, prefix_cache=None, _orig=e.admit, _ri=ri):
+            _orig(req, slot, prefix_cache=prefix_cache)
+            landed.append(_ri)
+        e.admit = spy
+    for rid in range(6):
+        router.admit(Request(rid=rid, tokens=np.arange(3, dtype=np.int32),
+                             gen=4), router.free_slots()[0])
+    # round-robin by load: ties always resolve to the lowest index
+    assert landed == [0, 1, 2, 0, 1, 2]
+
+
 def test_prefix_cache_validation_refresh_and_stats():
     from repro.serve.prefix import PrefixCache, common_prefix_len
     with pytest.raises(ValueError, match="cap"):

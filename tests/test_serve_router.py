@@ -1,0 +1,266 @@
+"""Fault-injection tests for the multi-replica ``ReplicaRouter``.
+
+Every failure path the router promises (docs/serving.md "Multi-replica
+routing") gets a deterministic test over ``FleetFakeEngine`` replicas:
+death mid-decode (no token loss before the failure point), death during
+prefill, double-kill, drain-then-kill, and deadline expiry of a request
+orphaned awaiting re-dispatch — each landing exactly one terminal status.
+The real-engine test drives a 2-replica fleet of jitted engines through a
+kill and asserts the re-dispatched streams stay token-identical to a
+single engine (the greedy-determinism argument, exercised on real math).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from helpers import tiny_cfg
+from repro.models import build_model
+from repro.serve import (ReplicaRouter, ReplicaState, ServeEngine,
+                         ServeFrontend, Status, frontend_table,
+                         synthetic_trace)
+from repro.serve.engine import Request
+from repro.serve.testing import FleetFakeEngine, ManualClock, fleet_token
+
+
+def _req(rid, plen=3, gen=4, deadline=None):
+    return Request(rid=rid, tokens=np.arange(1, plen + 1, dtype=np.int32),
+                   gen=gen, deadline=deadline)
+
+
+def _fleet(n_replicas, slots, **kw):
+    engines = [FleetFakeEngine(slots, **kw) for _ in range(n_replicas)]
+    return engines, ReplicaRouter(engines)
+
+
+def _stream(rid, n):
+    return [fleet_token(rid, i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# construction / validation
+# ---------------------------------------------------------------------------
+
+def test_router_validation():
+    with pytest.raises(ValueError, match="at least one engine"):
+        ReplicaRouter([])
+    with pytest.raises(ValueError, match="unknown route"):
+        ReplicaRouter([FleetFakeEngine(1)], route="round-robin")
+    # prefix-affinity needs a prefix-eligible stack
+    with pytest.raises(ValueError, match="prefix-affinity"):
+        ReplicaRouter([FleetFakeEngine(1)], route="prefix-affinity")
+    r = ReplicaRouter([FleetFakeEngine(1, prefix_ok=True)],
+                      route="prefix-affinity")
+    assert r.prefix_eligible()
+
+
+# ---------------------------------------------------------------------------
+# death mid-decode: re-dispatch with zero token loss
+# ---------------------------------------------------------------------------
+
+def test_death_mid_decode_no_token_loss():
+    """Tokens produced before the failing step survive the re-dispatch and
+    the continued stream is exact — no gap, no duplicate."""
+    engines, router = _fleet(2, 1)
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock())
+    h0, h1 = fe.submit(_req(0, gen=6)), fe.submit(_req(1, gen=3))
+    fe.step()                               # both decode one token
+    engines[0].fail_next_decode = True
+    while not (h0.finished and h1.finished):
+        fe.step()
+    assert h0.status is Status.DONE and h1.status is Status.DONE
+    assert h0.tokens == _stream(0, 6)
+    assert h1.tokens == _stream(1, 3)
+    assert router.rstats["redispatches"] == 1
+    assert router.rstats["orphaned"] == 1
+    assert router.states == [ReplicaState.DOWN, ReplicaState.UP]
+
+
+def test_death_during_prefill_retries_on_survivor():
+    """admit raising marks the replica DOWN and the same admit lands on
+    the next survivor — the caller never sees the exception."""
+    engines, router = _fleet(2, 1)
+    engines[0].fail_next_admit = True       # least-loaded would pick 0
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock())
+    h = fe.submit(_req(0, gen=3))
+    while not h.finished:
+        fe.step()
+    assert h.status is Status.DONE and h.tokens == _stream(0, 3)
+    assert router.states == [ReplicaState.DOWN, ReplicaState.UP]
+    assert engines[1].stats["admits"] == 1
+    assert router.rstats["replicas_down"] == 1
+
+
+def test_double_kill_is_idempotent():
+    engines, router = _fleet(2, 1)
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock())
+    h = fe.submit(_req(0, gen=5))
+    fe.step()
+    router.kill(0)
+    router.kill(0)                          # second kill: no-op
+    while not h.finished:
+        fe.step()
+    assert h.status is Status.DONE and h.tokens == _stream(0, 5)
+    assert router.rstats["replicas_down"] == 1
+    assert router.rstats["orphaned"] == 1
+    assert router.rstats["redispatches"] == 1
+
+
+def test_drain_then_kill_redispatches_in_flight():
+    """Killing a DRAINING replica orphans its in-flight requests like any
+    other death; they finish on survivors and the replica stays DOWN
+    (not drained — it was removed by failure, not by completion)."""
+    engines, router = _fleet(2, 2)
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock())
+    hs = [fe.submit(_req(i, gen=5)) for i in range(3)]
+    fe.step()                               # rid 0,2 on replica 0; rid 1 on 1
+    router.drain(0)
+    router.kill(0)
+    while not all(h.finished for h in hs):
+        fe.step()
+    for h in hs:
+        assert h.status is Status.DONE
+        assert h.tokens == _stream(h.rid, 5)
+    assert router.states[0] is ReplicaState.DOWN
+    assert not router.drained(0)
+    assert router.rstats["orphaned"] == 2
+
+
+def test_deadline_expiry_of_orphaned_request():
+    """A request orphaned by replica death (survivors busy, so it waits
+    PENDING) whose deadline passes is EXPIRED exactly once, keeping the
+    tokens produced before the death."""
+    engines, router = _fleet(2, 1)
+    clk = ManualClock()
+    fe = ServeFrontend(router, queue_depth=8, clock=clk)
+    h0 = fe.submit(_req(0, gen=20, deadline=5.0))
+    h1 = fe.submit(_req(1, gen=20))
+    fe.step()                               # both have 2 tokens
+    router.kill(0)                          # h0 orphaned; replica 1 busy
+    fe.step()
+    assert not h0.finished                  # waiting PENDING, not failed
+    clk.advance(10.0)                       # past h0's deadline
+    fe.step()
+    assert h0.status is Status.EXPIRED
+    assert h0.tokens == _stream(0, 2)       # pre-death tokens kept
+    while not h1.finished:
+        fe.step()
+    assert h1.status is Status.DONE and h1.tokens == _stream(1, 20)
+    assert router.rstats["redispatches"] == 0
+
+
+def test_all_replicas_dead_fails_exactly_once():
+    """With no survivor the request is finished FAILED once, with its
+    partial tokens; take_failed drains exactly once."""
+    engines, router = _fleet(2, 1)
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock())
+    h0, h1 = fe.submit(_req(0, gen=6)), fe.submit(_req(1, gen=6))
+    fe.step()
+    engines[0].fail_next_decode = True
+    engines[1].fail_next_decode = True
+    for _ in range(4):
+        fe.step()
+    assert h0.status is Status.FAILED and h1.status is Status.FAILED
+    assert h0.tokens == _stream(0, 2)       # pre-death prefix kept
+    assert h1.tokens == _stream(1, 2)
+    assert router.take_failed() == []       # already reaped, exactly once
+    tab = frontend_table([h0, h1], wall=1.0)
+    assert tab["failed"] == 2 and tab["done"] == 0
+
+
+def test_cancel_of_pending_orphan_frees_capacity():
+    """Cancelling an orphan waiting for re-dispatch releases its reserved
+    seat immediately (regression: a stale deque entry used to keep
+    under-reporting free_slots until the next step)."""
+    engines, router = _fleet(2, 1)
+    router.begin(0.0)
+    gid = router.free_slots()[0]
+    router.admit(_req(0, gen=6), gid)
+    router.kill(0)                          # rid 0 -> PENDING
+    assert router.free_slots() == []        # replica 1's seat is reserved
+    assert router.cancel(gid) == _stream(0, 1)
+    assert len(router.free_slots()) == 1    # seat released at cancel
+    router.decode_step()                    # stale-entry guard: no blowup
+    assert router.active_count() == 0
+
+
+def test_queued_requests_flow_to_survivors():
+    """Requests still in the admission queue when a replica dies are
+    admitted to survivors as slots free up — the queue never sees the
+    death."""
+    engines, router = _fleet(2, 1)
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock())
+    hs = [fe.submit(_req(i, gen=3)) for i in range(5)]
+    fe.step()
+    engines[0].fail_next_decode = True
+    while not all(h.finished for h in hs):
+        fe.step()
+    assert all(h.status is Status.DONE for h in hs)
+    for h in hs:
+        assert h.tokens == _stream(h.rid, 3)
+    assert engines[0].stats["admits"] == 1  # only the pre-death admit
+
+
+# ---------------------------------------------------------------------------
+# prefix-affinity routing
+# ---------------------------------------------------------------------------
+
+def test_prefix_affinity_overrides_least_loaded():
+    """A prompt whose prefix is cached on a busier replica still routes to
+    it; prompts with no cached prefix fall back to least-loaded."""
+    engines, router = _fleet(2, 2, prefix_ok=True)
+    router2 = ReplicaRouter(engines, route="prefix-affinity")
+    shared = np.arange(1, 9, dtype=np.int32)        # 8 tokens >= min_hit
+    router2._caches[1].insert(shared, cache="kv", nbytes=8)
+    # replica 1 busier than 0: least-loaded alone would pick 0
+    router2.admit(_req(5, gen=4), router2.free_slots()[0])
+    assert router2.vslots and engines[0].stats["admits"] == 1
+    hit = Request(rid=6, tokens=np.concatenate(
+        [shared, np.array([99], np.int32)]), gen=4)
+    router2.admit(hit, router2.free_slots()[0])
+    assert engines[1].stats["admits"] == 1          # affinity won
+    assert router2.rstats["affinity_hits"] == 1
+    miss = _req(7, plen=2, gen=4)
+    router2.admit(miss, router2.free_slots()[0])
+    assert engines[0].stats["admits"] == 2          # least-loaded fallback
+
+
+# ---------------------------------------------------------------------------
+# real engines: kill mid-trace, streams stay token-identical
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = tiny_cfg("qwen2-1.5b")
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def test_real_fleet_kill_streams_token_identical(lm):
+    """2 real engines behind the router, replica 0 killed mid-trace: every
+    re-dispatched stream must equal the single-engine reference — the
+    re-prefill overlap token is checked by the router on real argmax."""
+    model, params = lm
+    trace = synthetic_trace(n=5, seed=7, prompt_range=(4, 8),
+                            gen_range=(3, 6), vocab=model.cfg.vocab_size)
+    ref_eng = ServeEngine(model, params, n_slots=2, max_len=48)
+    ref = ref_eng.run(trace)
+
+    engines = [ServeEngine(model, params, n_slots=2, max_len=48)
+               for _ in range(2)]
+    router = ReplicaRouter(engines)
+    fe = ServeFrontend(router, queue_depth=8)
+    handles = [fe.submit(r) for r in trace]
+    fe.step()
+    fe.step()
+    router.kill(0)
+    for _ in range(256):
+        if not fe.step():
+            break
+    for h in handles:
+        assert h.status is Status.DONE, f"rid {h.rid} ended {h.status}"
+        assert h.tokens == [int(t) for t in ref[h.rid].tokens], \
+            f"rid {h.rid}: routed stream diverged after kill"
+    assert router.states[0] is ReplicaState.DOWN
+    assert router.rstats["orphaned"] > 0

@@ -18,7 +18,8 @@ import pytest
 from helpers import tiny_cfg
 from repro.configs import ARCH_IDS, DEIT_IDS
 from repro.models import build_model
-from repro.serve import PrefixCache, ServeEngine, ServeFrontend, Status
+from repro.serve import (PrefixCache, ReplicaRouter, ServeEngine,
+                         ServeFrontend, Status)
 from repro.serve.engine import Request
 
 MEM_LEN = 8        # enc-dec encoder-memory length used throughout
@@ -106,6 +107,63 @@ def test_zoo_prefix_cache_eligibility(zoo, arch):
             pass
     assert all(h.status is Status.DONE for h in fe.handles.values())
     assert fe.prefix_cache.hits == 1              # second request reuses
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_zoo_routed_admit_two_decodes(zoo, arch):
+    """The fleet serving floor: every LM config serves one admit + two
+    decode steps per replica through a 2-replica router (least-loaded
+    spreads the two requests one per replica)."""
+    model, params = zoo(arch)
+    engines = [_engine(model, params) for _ in range(2)]
+    router = ReplicaRouter(engines)
+    router.begin(0.0)
+    gids = []
+    for rid in range(2):
+        gid = router.free_slots()[0]
+        router.admit(_req(model.cfg, rid=rid), gid)
+        gids.append(gid)
+    assert [e.active_count() for e in engines] == [1, 1]
+    router.decode_step()
+    retired = router.decode_step()
+    assert sorted(retired) == sorted(gids)
+    for gid in retired:
+        comp = router.retire(gid)
+        assert comp.tokens.shape == (3,)
+        assert all(0 <= t < model.cfg.vocab_size for t in comp.tokens)
+    assert router.active_count() == 0
+    assert all(s.free for e in engines for s in e.slots)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.xfail(
+        reason=RAGGED_GAPS[a], strict=True)) if a in RAGGED_GAPS
+     else a for a in ARCH_IDS])
+def test_zoo_prefix_affinity_eligibility(zoo, arch):
+    """Prefix-affinity routing is constructible exactly where the prefix
+    cache is sound (the router refuses it elsewhere — xfail matrix), and
+    on eligible stacks the second shared-prefix admit sticks to the warm
+    replica."""
+    model, params = zoo(arch)
+    engines = [_engine(model, params, max_len=48) for _ in range(2)]
+    if model.cfg.family == "encdec":
+        assert not engines[0].prefix_eligible()
+        pytest.skip("enc-dec is prefix-ineligible by design (cross-attn)")
+    router = ReplicaRouter(engines, route="prefix-affinity")
+    router.begin(0.0)
+    shared = (np.arange(8) % 5 + 1).astype(np.int32)
+    for i in range(2):
+        gid = router.free_slots()[0]
+        router.admit(Request(rid=i, tokens=np.concatenate(
+            [shared, np.full((2,), 9 + i, np.int32)]), gen=2), gid)
+        router.decode_step()
+        router.retire(gid)
+    # both admits landed on replica 0: the first primed its cache, the
+    # second followed the prefix instead of the least-loaded tie-break
+    assert engines[0].stats["admits"] == 2
+    assert engines[1].stats["admits"] == 0
+    assert router.rstats["affinity_hits"] == 1
 
 
 @pytest.mark.parametrize("arch", DEIT_IDS[:1])
