@@ -50,6 +50,19 @@ Fleet gates (ISSUE 7):
             admits nothing new to it afterwards, and keeps p99 latency
             bounded by the run's wall time.
 
+Config-zoo gates (ISSUE 8):
+
+  recurrent slot bytes constant — a pure-recurrent stack (rwkv6) must
+            hold per-slot state bytes EXACTLY constant as max_len grows
+            4x, while the pure-KV reference grows near-linearly — the
+            serving win of the recurrent slot-cache contract
+            (docs/serving.md "Slot-cache contracts").
+
+  expert-pruned serving — a 50%-expert CORP-pruned MoE must serve
+            through the engine token-identical to its own full greedy
+            forward at the smaller expert count, with the compensated
+            fold inside parity tolerance of naive expert dropping.
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_serve.py
       (--table-out routed_trace.md writes the routed-trace p50/p99 table)
 """
@@ -266,6 +279,121 @@ def gate_drain():
           f"p99 {tab['lat_p99_ms']:.1f} <= wall {wall * 1e3:.1f} ms")
 
 
+def _zoo_cfg(arch):
+    """Reduced float32 config for the zoo gates (capacity bumped on MoE so
+    routing never drops tokens and greedy parity is exact)."""
+    import dataclasses
+    from repro.configs import get_config, reduced
+    cfg = reduced(get_config(arch)).replace(dtype="float32")
+    if cfg.moe is not None:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=8.0))
+    return cfg
+
+
+def _chain_ok(model, params, req, out_tokens):
+    """One-full-forward greedy self-consistency (tests/helpers.py)."""
+    import jax.numpy as jnp
+    import numpy as np
+    P = len(req.tokens)
+    seq = np.concatenate([np.asarray(req.tokens, np.int32),
+                          np.asarray(out_tokens[:-1], np.int32)])
+    logits = model.apply(params, {"tokens": jnp.asarray(seq)[None]})[0]
+    pred = np.asarray(jnp.argmax(logits[0, :, : model.cfg.vocab_size], -1))
+    return list(pred[P - 1: P - 1 + len(out_tokens)]) == \
+        [int(t) for t in out_tokens]
+
+
+def gate_recurrent_state_bytes():
+    """Pure-recurrent per-slot state bytes must be EXACTLY constant in
+    max_len (64 -> 256) while the pure-KV reference grows; the recurrent
+    engine must actually serve at that budget."""
+    built = {}
+    rows = []
+    for arch in ("rwkv6-3b", "qwen2-1.5b"):
+        cfg = _zoo_cfg(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        small = ServeEngine(model, params, n_slots=2, max_len=64)
+        large = ServeEngine(model, params, n_slots=2, max_len=256)
+        built[arch] = (small, large, model, params, cfg)
+        rows.append({"arch": cfg.name, "contract": small.contract,
+                     "slot_kb_len64": small.slotcache.slot_bytes / 1e3,
+                     "slot_kb_len256": large.slotcache.slot_bytes / 1e3,
+                     "growth": large.slotcache.slot_bytes
+                     / small.slotcache.slot_bytes})
+    print(format_table(rows))
+    rec_s, rec_l, model, params, cfg = built["rwkv6-3b"]
+    kv_s, kv_l = built["qwen2-1.5b"][:2]
+    assert rec_s.contract == "recurrent" and kv_s.contract == "kv"
+    assert rec_l.slotcache.slot_bytes == rec_s.slotcache.slot_bytes, (
+        f"recurrent slot bytes grew with max_len: "
+        f"{rec_s.slotcache.slot_bytes} -> {rec_l.slotcache.slot_bytes}")
+    kv_growth = kv_l.slotcache.slot_bytes / kv_s.slotcache.slot_bytes
+    assert kv_growth > 1.5, f"KV reference did not grow ({kv_growth:.2f}x)"
+    trace = synthetic_trace(4, cfg.vocab_size, seed=6,
+                            prompt_range=(4, 10), gen_range=(2, 6))
+    comps = rec_s.run(trace)
+    for r, c in zip(trace, comps):
+        assert len(c.tokens) == r.gen
+        assert _chain_ok(model, params, r, c.tokens), r.rid
+    print(f"[bench_serve] GATE recurrent slot bytes constant: "
+          f"{rec_s.slotcache.slot_bytes / 1e3:.1f} kB at max_len 64 AND "
+          f"256 (KV reference grows {kv_growth:.2f}x); "
+          f"{len(comps)} recurrent streams match the full forward")
+
+
+def gate_expert_pruned_serving():
+    """50%-expert CORP prune: compensated fold within parity tolerance of
+    naive dropping, and the pruned MoE serves through the engine
+    token-identical to its own full greedy forward."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.data import lm_batch
+    cfg = _zoo_cfg("qwen3-moe-235b-a22b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = calib_lm(cfg, n_samples=32, batch=4, seq=24)
+    batch = {"tokens": lm_batch(41_000, batch=4, seq=24,
+                                vocab=cfg.vocab_size, seed=0)["tokens"]}
+    y0 = model.apply(params, batch)[0]
+
+    errs, kept = {}, {}
+    for comp in (True, False):
+        new_p, new_c, _ = corp_prune(
+            model, params, calib,
+            PruneConfig(0.0, 0.0, expert_sparsity=0.5, compensate=comp))
+        pm = build_model(new_c)
+        y1 = pm.apply(new_p, batch)[0]
+        errs[comp] = float(jnp.mean(jnp.square(
+            (y1 - y0).astype(jnp.float32))))
+        kept[comp] = (new_c.eff_num_experts, new_p, new_c, pm)
+    n_kept = kept[True][0]
+    assert n_kept < cfg.moe.num_experts
+    print(format_table([
+        {"model": "dense", "experts": cfg.moe.num_experts, "mse": 0.0},
+        {"model": "experts dropped", "experts": n_kept,
+         "mse": errs[False]},
+        {"model": "experts folded", "experts": n_kept, "mse": errs[True]},
+    ]))
+    assert errs[True] <= errs[False] * 1.25, (
+        f"expert compensation outside parity tolerance: {errs}")
+
+    _, new_p, new_c, pm = kept[True]
+    rng = np.random.RandomState(8)
+    reqs = [Request(rid=i, tokens=rng.randint(
+        0, cfg.vocab_size, size=p).astype(np.int32), gen=g)
+        for i, (p, g) in enumerate([(5, 3), (9, 4), (4, 2), (7, 3)])]
+    comps = ServeEngine(pm, new_p, n_slots=2, max_len=24).run(reqs)
+    for r, c in zip(reqs, comps):
+        assert len(c.tokens) == r.gen
+        assert _chain_ok(pm, new_p, r, c.tokens), r.rid
+    print(f"[bench_serve] GATE expert-pruned serving: "
+          f"{cfg.moe.num_experts} -> {n_kept} experts, fold mse "
+          f"{errs[True]:.4f} <= 1.25x naive {errs[False]:.4f}; "
+          f"{len(comps)} pruned streams match the full forward")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -317,6 +445,10 @@ def main():
     gate_fleet_throughput(table_out=args.table_out)
     gate_fleet_parity(model, params, trace, comps_c)
     gate_drain()
+
+    # config-zoo gates (ISSUE 8)
+    gate_recurrent_state_bytes()
+    gate_expert_pruned_serving()
 
     # dense vs pruned serving table
     print(f"[bench_serve] CORP prune @ {args.sparsity:.0%}")

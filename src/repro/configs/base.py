@@ -92,6 +92,7 @@ class ModelConfig:
     d_ff_kept: Optional[int] = None     # kept MLP hidden channels (per expert for MoE)
     qk_kept: Optional[int] = None       # kept per-head qk dims (nope dims for MLA)
     d_inner_kept: Optional[int] = None  # kept mamba inner channels (beyond-paper)
+    experts_kept: Optional[int] = None  # kept routed experts (beyond-paper)
     # numerics -------------------------------------------------------------
     dtype: str = "bfloat16"
     vocab_round: int = 128         # embedding table padded to a multiple of this
@@ -105,6 +106,12 @@ class ModelConfig:
     def eff_d_expert(self) -> int:
         assert self.moe is not None
         return self.moe.d_expert if self.d_ff_kept is None else self.d_ff_kept
+
+    @property
+    def eff_num_experts(self) -> int:
+        assert self.moe is not None
+        return self.moe.num_experts if self.experts_kept is None \
+            else self.experts_kept
 
     @property
     def eff_dense_d_ff(self) -> Optional[int]:
@@ -194,8 +201,14 @@ class ModelConfig:
 
     # CORP helpers -----------------------------------------------------------
     def pruned(self, mlp_sparsity: float = 0.0, attn_sparsity: float = 0.0,
-               round_to: int = 1) -> "ModelConfig":
-        """Config after CORP pruning at the given sparsities."""
+               round_to: int = 1,
+               expert_sparsity: float = 0.0) -> "ModelConfig":
+        """Config after CORP pruning at the given sparsities.
+
+        ``expert_sparsity`` removes whole routed experts (MoE configs
+        only); the kept count never drops below ``top_k`` so routing stays
+        well-defined.
+        """
         def keep(full: int, s: float, rt: int = round_to) -> int:
             k = int(round(full * (1.0 - s)))
             if rt > 1:
@@ -221,6 +234,10 @@ class ModelConfig:
                 kw["qk_kept"] = 2 * kept_pairs
             else:
                 kw["qk_kept"] = keep(self.qk_full, attn_sparsity)
+        if expert_sparsity > 0 and self.moe is not None:
+            kw["experts_kept"] = max(self.moe.top_k,
+                                     keep(self.moe.num_experts,
+                                          expert_sparsity, 1))
         return self.replace(**kw) if kw else self
 
     @property

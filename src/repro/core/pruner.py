@@ -41,6 +41,7 @@ from repro.core.units import Unit, discover_units, get_block, set_block
 class PruneConfig:
     mlp_sparsity: float = 0.5
     attn_sparsity: float = 0.5
+    expert_sparsity: float = 0.0  # whole routed experts removed (beyond-paper)
     lam: float = 1e-4            # ridge, relative to mean diagonal
     rank_policy: str = "combined"
     compensate: bool = True      # False = rank-only baseline (paper ablation)
@@ -292,6 +293,81 @@ def _fold_moe_block(p, stats, unit: Unit, pc: PruneConfig, keep, prune,
     report[unit.name] = jax.device_get(
         jax.tree.map(lambda a: a.reshape(lead_shape), diag))
     return new
+
+
+def _fold_moe_experts(p, stats, unit: Unit, pc: PruneConfig, keep, prune,
+                      report):
+    """Whole-expert removal (beyond-paper MoE extension of Eq. 9).
+
+    The regression vector is the MoE block input concatenated with the
+    gate-weighted expert contributions ``z_t = [x_t, c_t1..c_tE]``
+    (moments yn/ys1/ys2 from ``repro.core.stats._p1_moe``): removed
+    experts' contribution blocks are ridge-regressed onto the *input*
+    block. Regressing on x rather than on the retained contributions is
+    deliberate — after removal the router renormalizes its gate mass onto
+    the surviving experts, shifting the retained-contribution distribution
+    away from calibration (a fit against them measurably hurts); the input
+    distribution at this block is routing-invariant. The summed solution
+    folds into a dense residual map ``moe_resid`` (D, D) and bias
+    ``moe_out_b`` applied after combine (repro.models.mlp.apply_moe);
+    retained experts' weights are gathered untouched. keep/prune:
+    (..., n) expert index arrays. Runs AFTER the hidden-channel fold.
+    """
+    new = dict(p)
+    wd = p["wd"]                          # (..., E, F, D)
+    lead = wd.shape[:-3]
+    E, F, D = wd.shape[-3:]
+    keep_j = jnp.asarray(keep, jnp.int32)
+    prune_j = jnp.asarray(prune, jnp.int32)
+    nP = prune_j.shape[-1]
+    pf = prune_j.reshape(-1, nP)
+    R = pf.shape[0]
+    V = (E + 1) * D
+    yn = jnp.maximum(jnp.asarray(stats["yn"], jnp.float32).reshape(R), 1.0)
+    ys1 = jnp.asarray(stats["ys1"], jnp.float32).reshape(R, V)
+    ys2 = jnp.asarray(stats["ys2"], jnp.float32).reshape(R, V, V)
+    ar = jnp.arange(D, dtype=jnp.int32)
+    idx_s = jnp.broadcast_to(ar, (R, D))                   # input block
+    idx_p = ((pf + 1)[..., None] * D + ar).reshape(R, nP * D)
+
+    def solve_one(n, s1, s2, i_s, i_p):
+        mu = s1 / n
+        sigma = s2 / n - jnp.outer(mu, mu)
+        lam = pc.lam * jnp.mean(jnp.diagonal(sigma))
+        sol = solve_mod.ridge_affine(mu, sigma, i_s, i_p, lam)
+        # removed contributions enter the output through identity
+        # (y = sum_e c_te) -> w_P is stacked identity blocks
+        w_p = jnp.tile(jnp.eye(D, dtype=jnp.float32), (nP, 1))
+        diag = solve_mod.mlp_distortion(sol, w_p)
+        w = jnp.sum(sol["B"].reshape(nP, D, D), axis=0)    # x -> sum_r c_r
+        b0 = jnp.sum(sol["c"].reshape(nP, D), axis=0)
+        return w.T, b0, diag                               # y += x @ w.T
+
+    W, b0, diag = jax.vmap(solve_one)(yn, ys1, ys2, idx_s, idx_p)
+    if pc.compensate:
+        new["moe_resid"] = W.reshape(lead + (D, D))
+        new["moe_out_b"] = b0.reshape(lead + (D,))
+    new["router"] = _gather(p["router"], keep_j, axis=p["router"].ndim - 1)
+    for k1 in ("wu", "wg", "wd"):
+        new[k1] = _gather(p[k1], keep_j, axis=p[k1].ndim - 3)
+    if "bd_moe" in p:
+        new["bd_moe"] = _gather(p["bd_moe"], keep_j,
+                                axis=p["bd_moe"].ndim - 2)
+    report[unit.name + "/experts"] = jax.device_get(
+        jax.tree.map(lambda x: x.reshape(lead), diag))
+    return new
+
+
+def _moe_expert_plan(units, p1, cfg, pc: PruneConfig):
+    """keep/prune expert index arrays per routed-MoE unit, or {}."""
+    if pc.expert_sparsity <= 0 or cfg.moe is None:
+        return {}
+    keep_n = max(cfg.moe.top_k,
+                 _keep_count(cfg.moe.num_experts, pc.expert_sparsity, 1))
+    if keep_n >= cfg.moe.num_experts:
+        return {}
+    return {u.name: rank_mod.rank_experts(p1[u.name], keep_n)
+            for u in units if u.kind == "moe"}
 
 
 def _fold_mamba_block(p, stats, unit: Unit, pc: PruneConfig, keep, prune,
@@ -631,6 +707,7 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
             full = st["rank"].shape[-1]       # dims (cls1) or pairs (cls2/3)
             keep, prune = rank_mod.rank_attn(st, _attn_keep_n(u, full, pc))
             plan[u.name] = (keep, prune)
+    e_plan = _moe_expert_plan(units, p1, cfg, pc)
     report["timing"]["rank"] = time.time() - t0
 
     # --- pass 2: attention compensation statistics -------------------------
@@ -657,35 +734,43 @@ def corp_prune(model, params, calib_batches: Callable[[], Iterable],
     say("closed-form compensation + fold")
     new_params = copy.deepcopy(jax.device_get(params))
     for u in units:
-        if u.name not in plan:
+        if u.name not in plan and u.name not in e_plan:
             continue
-        keep, prune = plan[u.name]
         block = get_block(new_params, u)
-        if u.kind in ("mlp", "rwkv_mlp"):
-            tgt = block["shared"] if u.shared_expert else block
-            folded = _fold_mlp_block(tgt, p1[u.name], u, pc, keep, prune,
-                                     report["units"])
-            if u.shared_expert:
-                block = dict(block, shared=folded)
+        if u.name in plan:
+            keep, prune = plan[u.name]
+            if u.kind in ("mlp", "rwkv_mlp"):
+                tgt = block["shared"] if u.shared_expert else block
+                folded = _fold_mlp_block(tgt, p1[u.name], u, pc, keep,
+                                         prune, report["units"])
+                if u.shared_expert:
+                    block = dict(block, shared=folded)
+                else:
+                    block = folded
+            elif u.kind == "moe":
+                block = _fold_moe_block(block, p1[u.name], u, pc, keep,
+                                        prune, report["units"])
+            elif u.kind == "mamba":
+                block = _fold_mamba_block(block, p1[u.name], u, pc, keep,
+                                          prune, report["units"])
             else:
-                block = folded
-        elif u.kind == "moe":
-            block = _fold_moe_block(block, p1[u.name], u, pc, keep, prune,
-                                    report["units"])
-        elif u.kind == "mamba":
-            block = _fold_mamba_block(block, p1[u.name], u, pc, keep, prune,
+                block = _fold_attn_block(block, p2[u.name], u, cfg, pc,
+                                         keep, prune, report["units"])
+        if u.name in e_plan:
+            ek, ep = e_plan[u.name]
+            block = _fold_moe_experts(block, p1[u.name], u, pc, ek, ep,
                                       report["units"])
-        else:
-            block = _fold_attn_block(block, p2[u.name], u, cfg, pc, keep,
-                                     prune, report["units"])
         set_block(new_params, u, block)
     report["timing"]["fold"] = time.time() - t0
     report["plan_sizes"] = {k: v[0].shape for k, v in plan.items()}
+    report["plan_sizes"].update(
+        {k + "/experts": v[0].shape for k, v in e_plan.items()})
     report["traversals"] = calls[0]
 
     new_cfg = cfg.pruned(pc.mlp_sparsity if pc.mlp_sparsity > 0 else 0.0,
                          pc.attn_sparsity if pc.attn_sparsity > 0 else 0.0,
-                         round_to=pc.round_to)
+                         round_to=pc.round_to,
+                         expert_sparsity=pc.expert_sparsity)
     if not pc.include_mamba and new_cfg.d_inner_kept is not None:
         new_cfg = new_cfg.replace(d_inner_kept=None)
     return new_params, new_cfg, report
@@ -787,6 +872,7 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                 full = st["rank"].shape[-1]
                 plan[u.name] = rank_mod.rank_attn(
                     st, _attn_keep_n(u, full, pc))
+        e_plan = _moe_expert_plan(units, p1, cfg, pc)
         attn_plan = {u.name: plan[u.name] for u in units
                      if u.kind in _ATTN_KINDS and u.name in plan}
         p2 = {}
@@ -800,32 +886,39 @@ def corp_prune_streamed(model, params, calib_batches: Callable[[], Iterable],
                 spec_report["hits"] += sorted(set(attn_plan) - set(misses))
                 spec_report["misses"] += sorted(misses)
         for u in units:
-            if u.name not in plan:
+            if u.name not in plan and u.name not in e_plan:
                 continue
-            keep, prune = plan[u.name]
             block = get_block(new_params, u)
-            if u.kind in ("mlp", "rwkv_mlp"):
-                tgt = block["shared"] if u.shared_expert else block
-                folded = _fold_mlp_block(tgt, p1[u.name], u, pc, keep,
-                                         prune, report["units"])
-                block = dict(block, shared=folded) if u.shared_expert \
-                    else folded
-            elif u.kind == "moe":
-                block = _fold_moe_block(block, p1[u.name], u, pc, keep,
-                                        prune, report["units"])
-            elif u.kind == "mamba":
-                block = _fold_mamba_block(block, p1[u.name], u, pc, keep,
-                                          prune, report["units"])
-            else:
-                block = _fold_attn_block(block, p2[u.name], u, cfg, pc,
-                                         keep, prune, report["units"])
+            if u.name in plan:
+                keep, prune = plan[u.name]
+                if u.kind in ("mlp", "rwkv_mlp"):
+                    tgt = block["shared"] if u.shared_expert else block
+                    folded = _fold_mlp_block(tgt, p1[u.name], u, pc, keep,
+                                             prune, report["units"])
+                    block = dict(block, shared=folded) if u.shared_expert \
+                        else folded
+                elif u.kind == "moe":
+                    block = _fold_moe_block(block, p1[u.name], u, pc, keep,
+                                            prune, report["units"])
+                elif u.kind == "mamba":
+                    block = _fold_mamba_block(block, p1[u.name], u, pc,
+                                              keep, prune, report["units"])
+                else:
+                    block = _fold_attn_block(block, p2[u.name], u, cfg, pc,
+                                             keep, prune, report["units"])
+            if u.name in e_plan:
+                ek, ep = e_plan[u.name]
+                block = _fold_moe_experts(block, p1[u.name], u, pc, ek, ep,
+                                          report["units"])
             set_block(new_params, u, block)
         merged_plan.update(plan)
+        merged_plan.update({k + "/experts": v for k, v in e_plan.items()})
         report["groups"] += 1
 
     new_cfg = cfg.pruned(pc.mlp_sparsity if pc.mlp_sparsity > 0 else 0.0,
                          pc.attn_sparsity if pc.attn_sparsity > 0 else 0.0,
-                         round_to=pc.round_to)
+                         round_to=pc.round_to,
+                         expert_sparsity=pc.expert_sparsity)
     if not pc.include_mamba and new_cfg.d_inner_kept is not None:
         new_cfg = new_cfg.replace(d_inner_kept=None)
     report["plan_sizes"] = {k: v[0].shape for k, v in merged_plan.items()}

@@ -54,6 +54,29 @@ def rank_attn(stats, keep_n: int):
     return _select(np.asarray(stats["rank"], np.float64), keep_n)
 
 
+def expert_scores(stats) -> np.ndarray:
+    """Per-expert contribution energy from pass-1 moments.
+
+    ``stats['ys2']`` is the (..., (E+1)D, (E+1)D) second moment of the MoE
+    block input concatenated with the gate-weighted expert contributions
+    (repro.core.stats._p1_moe); the trace of expert e's diagonal block is
+    ``E[||c_te||^2]`` — how much of the MoE output's energy that expert
+    carries under the calibration distribution. Block 0 (the input) is
+    skipped.
+    """
+    n = np.maximum(np.asarray(stats["yn"], np.float64), 1.0)
+    s2 = np.asarray(stats["ys2"], np.float64)
+    e_num = np.asarray(stats["n"], np.float64).shape[-1]   # (..., E) counts
+    diag = np.einsum("...ii->...i", s2)                     # (..., (E+1)D)
+    per = diag.reshape(diag.shape[:-1] + (e_num + 1, -1)).sum(-1)
+    return per[..., 1:] / n[..., None]
+
+
+def rank_experts(stats, keep_n: int):
+    """Kept/pruned routed-expert indices by contribution energy."""
+    return _select(expert_scores(stats), keep_n)
+
+
 # ---------------------------------------------------------------------------
 # speculative candidate selection (one-traversal calibration)
 # ---------------------------------------------------------------------------

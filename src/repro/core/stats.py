@@ -187,16 +187,38 @@ def _p1_mlp(taps, unit: Unit):
 def _p1_moe(taps, unit: Unit):
     h = taps[f"{unit.tap_prefix}/moe_h"]        # (G,E,C,F) [+reps]
     mask = taps[f"{unit.tap_prefix}/moe_mask"]  # (G,E,C)
+    yc = taps.get(f"{unit.tap_prefix}/moe_yc")  # (G,T,E,D) [+reps]
+    yx = taps.get(f"{unit.tap_prefix}/moe_x")   # (G,T,D) [+reps]
 
-    def one(hh, mm):
+    def one(hh, mm, cc=None, xx=None):
         # merge group dim into capacity
         G, E, C, F = hh.shape
         hh = hh.transpose(1, 0, 2, 3).reshape(E, G * C, F)
         mm = mm.transpose(1, 0, 2).reshape(E, G * C)
-        return _masked_moments(hh, mm)
+        out = _masked_moments(hh, mm)
+        if cc is not None:
+            # expert-removal moments: per token the block input x_t (D,)
+            # concatenated with the gate-weighted expert contributions
+            # c_te (D, per expert) -> z_t ((E+1)D,). Undispatched experts
+            # contribute exact zeros. The ridge regresses removed experts'
+            # contribution blocks onto the *input* block (whose
+            # distribution is routing-invariant, so the fit survives the
+            # post-prune gate renormalization); the contribution blocks'
+            # diagonal traces are the expert ranking scores
+            # (repro.core.pruner._fold_moe_experts, ranking.expert_scores).
+            D = cc.shape[-1]
+            z = jnp.concatenate(
+                [xx.astype(jnp.float32).reshape(-1, D),
+                 cc.astype(jnp.float32).reshape(-1, cc.shape[-2] * D)],
+                axis=-1)
+            out["yn"] = jnp.asarray(z.shape[0], jnp.float32)
+            out["ys1"] = jnp.sum(z, axis=0)
+            out["ys2"] = z.T @ z
+        return out
     if unit.stacked:
-        return jax.vmap(one)(h, mask)
-    return one(h, mask)
+        return jax.vmap(one)(h, mask) if yc is None \
+            else jax.vmap(one)(h, mask, yc, yx)
+    return one(h, mask) if yc is None else one(h, mask, yc, yx)
 
 
 def _p1_attn(taps, unit: Unit, cfg):

@@ -49,6 +49,11 @@ def main():
     ap.add_argument("--attn-sparsity", type=float, default=None,
                     help="override --sparsity for attention qk dims/rotary "
                          "pairs (0 disables attention pruning)")
+    ap.add_argument("--expert-sparsity", type=float, default=0.0,
+                    help="fraction of WHOLE routed experts to remove (MoE "
+                         "archs only; kept count never drops below top_k; "
+                         "removed experts' contributions are ridge-folded "
+                         "onto the retained set)")
     ap.add_argument("--calib", type=int, default=128,
                     help="number of calibration samples (unlabeled)")
     ap.add_argument("--calib-batch", type=int, default=8,
@@ -139,6 +144,7 @@ def main():
                       else args.sparsity),
         attn_sparsity=(args.attn_sparsity if args.attn_sparsity is not None
                        else args.sparsity),
+        expert_sparsity=args.expert_sparsity,
         lam=args.lam,
         rank_policy=args.rank_policy,
         compensate=not args.no_compensate,
@@ -166,7 +172,9 @@ def main():
     dt = time.time() - t0
     print(f"[prune] done in {dt:.1f}s; "
           f"d_ff {cfg.d_ff} -> {new_cfg.eff_d_ff}, "
-          f"qk {cfg.qk_full} -> {new_cfg.eff_qk}")
+          f"qk {cfg.qk_full} -> {new_cfg.eff_qk}"
+          + (f", experts {cfg.moe.num_experts} -> "
+             f"{new_cfg.eff_num_experts}" if cfg.moe is not None else ""))
     if "speculative" in report:
         sp = report["speculative"]
         print(f"[prune] one-traversal: {report['traversals']} traversal(s), "
@@ -179,7 +187,8 @@ def main():
         save_checkpoint(args.out, 0, new_params,
                         extra={"config": new_cfg.name,
                                "mlp_sparsity": pc.mlp_sparsity,
-                               "attn_sparsity": pc.attn_sparsity})
+                               "attn_sparsity": pc.attn_sparsity,
+                               "expert_sparsity": pc.expert_sparsity})
         with open(f"{args.out}/report.json", "w") as f:
             # stacked-layer units report per-layer diagnostic arrays
             json.dump(jax.tree.map(

@@ -87,7 +87,7 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                 rate=None, seed=0, compare_static=False, queue_depth=16,
                 deadline_ms=None, deadline_frac=1.0, prefix_cache=0,
                 prefix_len=0, spf=False, replicas=1, route="least-loaded",
-                log=print):
+                mem_len=None, log=print):
     """Async front-end + continuous-batching engine over a synthetic trace.
 
     The trace drives the full serving stack: Poisson arrivals (``rate``),
@@ -116,8 +116,10 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                             prompt_range=prompt_range, gen_range=gen_range,
                             rate=rate, deadline_range=dl_range,
                             deadline_frac=deadline_frac,
-                            prefix_len=prefix_len)
-    engines = [ServeEngine(model, params, n_slots=slots, max_len=max_len)
+                            prefix_len=prefix_len, mem_len=mem_len,
+                            d_model=cfg.d_model)
+    engines = [ServeEngine(model, params, n_slots=slots, max_len=max_len,
+                           mem_len=mem_len)
                for _ in range(max(1, replicas))]
     for e in engines:
         e.warmup(prompt_lens=[len(r.tokens) for r in trace],
@@ -170,6 +172,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--sparsity", type=float, default=0.0)
+    ap.add_argument("--expert-sparsity", type=float, default=0.0,
+                    help="serve with a fraction of routed experts removed "
+                         "(MoE archs; mirrors repro.launch.prune)")
+    ap.add_argument("--mem-len", type=int, default=None,
+                    help="enc-dec only: fixed encoder-memory length; trace "
+                         "requests carry synthetic frames of this length")
     ap.add_argument("--ckpt-in", default=None)
     ap.add_argument("--trace", type=int, default=0,
                     help="serve N synthetic ragged requests through the "
@@ -217,8 +225,9 @@ def main():
     args = ap.parse_args()
 
     cfg = resolve_config(args.arch)
-    if args.sparsity > 0:
-        cfg = cfg.pruned(args.sparsity, args.sparsity)
+    if args.sparsity > 0 or args.expert_sparsity > 0:
+        cfg = cfg.pruned(args.sparsity, args.sparsity,
+                         expert_sparsity=args.expert_sparsity)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     if args.ckpt_in:
@@ -238,7 +247,8 @@ def main():
                     deadline_frac=args.deadline_frac,
                     prefix_cache=args.prefix_cache,
                     prefix_len=args.prefix_len, spf=args.spf,
-                    replicas=args.replicas, route=args.route)
+                    replicas=args.replicas, route=args.route,
+                    mem_len=args.mem_len)
     else:
         serve_loop(model, params, batch=args.batch,
                    prompt_len=args.prompt_len, gen=args.gen,

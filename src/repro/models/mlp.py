@@ -73,7 +73,7 @@ def apply_mlp(p, x, cfg, taps=None):
 def init_moe(key, cfg):
     dt = dtype_of(cfg)
     m = cfg.moe
-    D, E = cfg.d_model, m.num_experts
+    D, E = cfg.d_model, cfg.eff_num_experts
     F = cfg.eff_d_ff if cfg.d_ff_kept is not None else m.d_expert
     ks = jax.random.split(key, 5)
     p = {
@@ -104,7 +104,7 @@ def _group_tokens(x, target=2048):
 def apply_moe(p, x, cfg, taps=None, train=False):
     """Top-k routed experts with capacity; returns (y, aux_loss)."""
     m = cfg.moe
-    E, K = m.num_experts, m.top_k
+    E, K = cfg.eff_num_experts, m.top_k
     B, T, D = x.shape
     xg, n = _group_tokens(x)
     G, tg, _ = xg.shape
@@ -140,7 +140,24 @@ def apply_moe(p, x, cfg, taps=None, train=False):
     if taps is not None:
         taps["moe_mask"] = jnp.einsum("gtec->gec", dispatch).astype(jnp.float32)
     ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    if "bd_moe" in p:   # CORP hidden-channel compensation bias (per expert)
+        # inside the expert output, before combine: dispatched tokens get
+        # it gate-weighted, empty capacity slots are zeroed by combine
+        ye = ye + p["bd_moe"].astype(ye.dtype)[None, :, None, :]
+    if taps is not None:
+        # expert-removal compensation statistics (repro.core.stats._p1_moe):
+        # block input x_t plus per-token per-expert *contributions*
+        # (gate-weighted expert outputs) — removed experts' contributions
+        # are regressed onto x, whose distribution is routing-invariant
+        tap(taps, "moe_x", xg)
+        tap(taps, "moe_yc",
+            jnp.einsum("gtec,gecd->gted", combine.astype(dt), ye))
     y = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), ye)
+    if "moe_resid" in p:   # CORP expert-removal compensation (input map)
+        y = y + jnp.einsum("gtd,dc->gtc", xg.astype(jnp.float32),
+                           p["moe_resid"]).astype(dt)
+    if "moe_out_b" in p:   # CORP expert-removal compensation bias
+        y = y + p["moe_out_b"].astype(dt)
     y = y.reshape(B, T, D)
 
     if "shared" in p:

@@ -1,19 +1,22 @@
 """Continuous-batching serving subsystem (slot engine + async front-end).
 
-See docs/serving.md for the slot lifecycle, cache layout, and the
+See docs/serving.md for the slot lifecycle, slot-cache contracts, and the
 front-end's queue/deadline/prefix-cache semantics.
 """
-from repro.serve.cache import SlotCache, cache_bytes
+from repro.serve.cache import (RecurrentSlotCache, SlotCache, cache_bytes,
+                               cache_contract)
 from repro.serve.engine import (Completion, Request, ServeEngine,
                                 run_static_trace, synthetic_trace,
                                 percentile_table)
+from repro.serve.errors import ERRORS
 from repro.serve.frontend import (AsyncServeFrontend, Handle, ServeFrontend,
                                   frontend_table)
 from repro.serve.prefix import PrefixCache
 from repro.serve.queue import AdmissionQueue, Overloaded, Status
 from repro.serve.router import ReplicaRouter, ReplicaState
 
-__all__ = ["SlotCache", "cache_bytes", "Request", "Completion",
+__all__ = ["SlotCache", "RecurrentSlotCache", "cache_bytes",
+           "cache_contract", "ERRORS", "Request", "Completion",
            "ServeEngine", "run_static_trace", "synthetic_trace",
            "percentile_table", "ServeFrontend", "AsyncServeFrontend",
            "Handle", "frontend_table", "PrefixCache", "AdmissionQueue",

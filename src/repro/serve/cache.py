@@ -30,6 +30,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
+RECURRENT_KINDS = frozenset({"mamba", "rwkv"})
+
+
+def cache_contract(cfg) -> str:
+    """Classify a config's slot-cache contract: what a slot holds, how it
+    grows, and what admit/retire must do (docs/serving.md).
+
+    - ``"kv"``        — per-token KV rows up to ``max_len``; bytes grow with
+      the budget; freed slots are inert under the ``pos`` mask.
+    - ``"recurrent"`` — fixed-size wkv6/SSM state (hybrids with any
+      mamba/rwkv layer count too: one contaminated layer breaks the KV
+      row-locality premise for the whole stack); bytes constant in
+      ``max_len``; retire must *reset* the state (a lossy whole-history
+      summary has no mask to hide behind).
+    - ``"encdec"``    — decoder self-attn KV plus a fixed cross-attn memory
+      keyed by the encoder frames, not the prompt tokens.
+    """
+    if cfg.family == "encdec":
+        return "encdec"
+    if set(cfg.layer_kinds) & RECURRENT_KINDS:
+        return "recurrent"
+    return "kv"
+
 
 def _infer_batch_axes(tree1, tree2):
     """Per-leaf batch axis: the first dim that differs between the two
@@ -89,3 +112,34 @@ class SlotCache:
     @property
     def bytes(self) -> int:
         return cache_bytes(self.cache)
+
+    @property
+    def slot_bytes(self) -> int:
+        """Bytes one slot occupies (the per-request cache cost)."""
+        return self.bytes // self.n_slots
+
+
+class RecurrentSlotCache(SlotCache):
+    """Slot cache for the *recurrent* contract: each slot holds a fixed-size
+    wkv6/SSM state instead of growing KV rows.
+
+    Admit is the same donated per-slot scatter as ``SlotCache`` (recurrent
+    states have no time axis, so the whole lane is replaced), decode is the
+    same shared step — the difference is retire. A freed KV slot is inert
+    behind its ``pos`` mask, but a recurrent state is a lossy summary of the
+    whole history with no mask to hide behind, so ``reset_slot`` scatters
+    the empty-history (zero) state back into the lane. ``slot_bytes`` is
+    constant in ``max_len`` — the cheaper cache contract the recurrent
+    bench row gates (benchmarks/bench_serve.py).
+    """
+
+    def __init__(self, template_fn, n_slots: int):
+        super().__init__(template_fn, n_slots)
+        # batch-1 empty-history state, reused by every reset_slot scatter
+        self._blank = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                   template_fn(1))
+
+    def reset_slot(self, slot: int):
+        """Retire/cancel: return ``slot``'s lane to the empty-history
+        state (the state the next admit's scatter expects to replace)."""
+        self.write_slot(self._blank, slot)

@@ -16,8 +16,16 @@ the throughput win over static batching comes from on ragged traces
 Prompt-length bucketing bounds recompiles: prompts are right-padded to the
 next bucket and prefilled with per-sample true ``lengths`` (causal attention
 keeps cache rows < length exact — see ``lm_prefill``). Ragged prefill is
-only sound for pure global-attention stacks; sliding-window / recurrent
-archs fall back to exact-length prefill (one compile per distinct length).
+only sound for pure global-attention stacks; sliding-window archs fall back
+to exact-length prefill (one compile per distinct length).
+
+The engine dispatches on the config's **slot-cache contract**
+(``serve/cache.py::cache_contract``, docs/serving.md) rather than
+hard-coding KV: recurrent stacks (rwkv6, jamba hybrids) get a
+``RecurrentSlotCache`` of fixed-size states — cold admits prefill the
+longest chunk-quantized prefix exactly and walk the remainder through the
+shared batch-1 decode step (bounded compiles without ragged soundness), and
+retire *resets* the slot state instead of relying on the ``pos`` mask.
 
 Pruned models plug in transparently: a ``cfg.pruned(...)`` config shrinks
 ``eff_qk`` and the slot cache's K rows shrink with it — the structured-
@@ -34,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.cache import SlotCache
+from repro.serve import errors
+from repro.serve.cache import RecurrentSlotCache, SlotCache, cache_contract
 
 
 @dataclasses.dataclass
@@ -106,14 +115,15 @@ class ServeEngine:
                  buckets=None, mem_len: Optional[int] = None):
         cfg = model.cfg
         if model.prefill is None or model.decode_step is None:
-            raise ValueError(f"{cfg.name}: family {cfg.family!r} has no "
-                             "serving path")
+            raise ValueError(errors.msg("no_serving_path", name=cfg.name,
+                                        family=cfg.family))
         # corp_prune returns host (numpy) leaves; indexing ops inside the
         # jitted prefill need device arrays
         self.model, self.cfg = model, cfg
         self.params = jax.tree.map(jnp.asarray, params)
         self.n_slots, self.max_len = n_slots, max_len
         self.mem_len = mem_len
+        self.contract = cache_contract(cfg)
         # ragged (bucketed) prefill: sound iff every cache row < length is
         # independent of the padded tail — pure causal global attention
         self.ragged_ok = set(cfg.layer_kinds) == {"attn"}
@@ -121,7 +131,9 @@ class ServeEngine:
             default_buckets(max_len)
         self.slots = [_Slot() for _ in range(n_slots)]
         self.tokens = np.zeros((n_slots,), np.int32)   # next decode inputs
-        self.slotcache = SlotCache(self._cache_template, n_slots)
+        cache_cls = RecurrentSlotCache if self.contract == "recurrent" \
+            else SlotCache
+        self.slotcache = cache_cls(self._cache_template, n_slots)
         self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
         # batch-1 decode over a *local* (pre-scatter) cache: the prefix-hit
         # suffix path. NOT donated — the input may be a shared PrefixCache
@@ -138,8 +150,7 @@ class ServeEngine:
                                               jnp.int32)}
         if self.cfg.family == "encdec":
             if self.mem_len is None:
-                raise ValueError("encdec serving needs mem_len= (fixed "
-                                 "encoder memory length)")
+                raise ValueError(errors.msg("encdec_needs_mem_len"))
             req["frames"] = jax.ShapeDtypeStruct(
                 (batch, self.mem_len, self.cfg.d_model),
                 jnp.dtype(self.cfg.dtype))
@@ -169,8 +180,8 @@ class ServeEngine:
         for b in self.buckets:
             if b >= n:
                 return b
-        raise ValueError(f"prompt length {n} exceeds largest bucket "
-                         f"{self.buckets[-1]}")
+        raise ValueError(errors.msg("prompt_exceeds_bucket", n=n,
+                                    bucket=self.buckets[-1]))
 
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.free]
@@ -187,22 +198,33 @@ class ServeEngine:
         ``decode_step`` directly must call it once before serving."""
         self._t0 = time.perf_counter() if t0 is None else t0
 
-    # prefix reuse is exact only where ragged prefill is (pure causal global
-    # attention: cache rows are a pure function of the tokens at or before
-    # them); enc-dec is excluded because the encoder memory keys the cross
-    # attention, not the prompt tokens alone
+    # prefix reuse needs a *replayable* contract: pure causal global
+    # attention (cache rows are a pure function of the tokens at or before
+    # them — any prefix is a rewind), or a recurrent state reused whole
+    # (serve/prefix.py::usable_prefix_len). Enc-dec is excluded because the
+    # encoder memory keys the cross attention, not the prompt tokens alone;
+    # sliding-window ring buffers are neither rewindable nor snapshot-whole.
     def prefix_eligible(self) -> bool:
-        return self.ragged_ok and self.cfg.family == "lm"
+        return (self.ragged_ok and self.cfg.family == "lm") \
+            or self.contract == "recurrent"
 
     def _splice_prefix(self, req: Request, entry_cache, hit_len: int):
-        """Prefix-hit admit path: rewind a cached prefill cache to the hit
-        length and run only the un-cached suffix, token by token, through
-        the batch-1 decode step. Exact by causality (see serve/prefix.py).
+        """Prefix-hit admit path, then run only the un-cached suffix, token
+        by token, through the batch-1 decode step.
+
+        KV contract: rewind the cached prefill cache to the hit length
+        (exact by causality, see serve/prefix.py). Recurrent contract: the
+        entry is a whole-prefix state snapshot used as-is — ``hit_len ==
+        len(entry.tokens)`` by the whole-entry lookup, so its ``pos``
+        leaves already match and there is nothing to rewind.
         Returns (first_token, local_cache) like ``_prefill``."""
-        from repro.models.lm import override_cache_pos
         P = len(req.tokens)
-        local = override_cache_pos(entry_cache,
-                                   jnp.full((1,), hit_len, jnp.int32))
+        if self.contract == "recurrent":
+            local = entry_cache
+        else:
+            from repro.models.lm import override_cache_pos
+            local = override_cache_pos(entry_cache,
+                                       jnp.full((1,), hit_len, jnp.int32))
         nxt = None
         for t in np.asarray(req.tokens[hit_len:], np.int32):
             nxt, local = self._decode1(self.params,
@@ -211,6 +233,31 @@ class ServeEngine:
         self.stats["prefix_reused_tokens"] += hit_len
         self.stats["prefix_suffix_tokens"] += P - hit_len
         return int(nxt[0]), local
+
+    def _prefill_recurrent(self, req: Request, prefix_cache=None):
+        """Cold admit under the recurrent contract: exact prefill of the
+        longest chunk-quantized prefix (compile count bounded to one shape
+        per multiple of the smallest bucket — recurrent stacks can't pad),
+        then the remaining tokens one at a time through the shared batch-1
+        decode step. With a ``prefix_cache``, the chunk state is inserted
+        under its exact token prefix: the whole-entry snapshot a later
+        prompt extending it can reuse."""
+        P = len(req.tokens)
+        lo = self.buckets[0]
+        L0 = max(1, lo * ((P - 1) // lo))
+        toks = np.asarray(req.tokens[:L0], np.int32)[None]
+        first, local = self._prefill(self.params,
+                                     {"tokens": jnp.asarray(toks)},
+                                     jnp.asarray([L0], jnp.int32))
+        self.stats[f"prefill_b{L0}"] += 1
+        if prefix_cache is not None and L0 >= prefix_cache.min_hit:
+            from repro.serve.cache import cache_bytes
+            prefix_cache.insert(req.tokens[:L0], local, cache_bytes(local))
+        for t in np.asarray(req.tokens[L0:], np.int32):
+            first, local = self._decode1(self.params,
+                                         jnp.full((1, 1), t, jnp.int32),
+                                         local)
+        return int(first[0]), local
 
     def admit(self, req: Request, slot: int, prefix_cache=None):
         """Prefill ``req`` and install it into ``slot``.
@@ -221,12 +268,18 @@ class ServeEngine:
         """
         P = len(req.tokens)
         if P + req.gen > self.max_len:
-            raise ValueError(f"request {req.rid}: prompt {P} + gen "
-                             f"{req.gen} exceeds max_len {self.max_len}")
+            raise ValueError(errors.msg("request_exceeds_max_len",
+                                        rid=req.rid, prompt=P, gen=req.gen,
+                                        max_len=self.max_len))
         use_prefix = prefix_cache is not None and self.prefix_eligible()
-        hit = prefix_cache.lookup(req.tokens) if use_prefix else None
+        recurrent = self.contract == "recurrent"
+        hit = prefix_cache.lookup(req.tokens, whole_entry=recurrent) \
+            if use_prefix else None
         if hit is not None:
             first, local = self._splice_prefix(req, hit[0].cache, hit[1])
+        elif recurrent:
+            first, local = self._prefill_recurrent(
+                req, prefix_cache if use_prefix else None)
         else:
             L = self._bucket(P)
             toks = np.zeros((1, L), np.int32)
@@ -235,9 +288,9 @@ class ServeEngine:
             if self.cfg.family == "encdec":
                 fr = np.asarray(req.frames)
                 if fr.shape[0] != self.mem_len:
-                    raise ValueError(f"request {req.rid}: frames length "
-                                     f"{fr.shape[0]} != mem_len "
-                                     f"{self.mem_len}")
+                    raise ValueError(errors.msg(
+                        "frames_mem_len_mismatch", rid=req.rid,
+                        frames=fr.shape[0], mem_len=self.mem_len))
                 batch["frames"] = jnp.asarray(fr)[None]
             first, local = self._prefill(self.params, batch,
                                          jnp.asarray([P], jnp.int32))
@@ -289,6 +342,8 @@ class ServeEngine:
             prompt_len=len(s.req.tokens), arrival=s.req.arrival,
             t_admit=s.t_admit, t_first=s.t_first, t_done=self._now())
         s.rid, s.req, s.remaining = -1, None, 0
+        if self.contract == "recurrent":
+            self.slotcache.reset_slot(slot)
         return comp
 
     def cancel(self, slot: int) -> List[int]:
@@ -296,12 +351,15 @@ class ServeEngine:
         generation (deadline expiry / caller cancel) and return the partial
         tokens produced so far. The slot is refillable on the next admit,
         exactly like a normal retire — its stale cache lanes are inert
-        (masked by ``pos``) until overwritten."""
+        (masked by ``pos``, or reset under the recurrent contract) until
+        overwritten."""
         s = self.slots[slot]
         if s.free:
-            raise ValueError(f"cancel on free slot {slot}")
+            raise ValueError(errors.msg("cancel_free_slot", slot=slot))
         partial = list(s.out)
         s.rid, s.req, s.remaining = -1, None, 0
+        if self.contract == "recurrent":
+            self.slotcache.reset_slot(slot)
         self.stats["cancels"] += 1
         return partial
 
@@ -345,15 +403,16 @@ class ServeEngine:
         admit path uses."""
         if prefix:
             if not self.prefix_eligible():
-                raise ValueError(f"{self.cfg.name}: prefix cache needs a "
-                                 "pure global-attention LM stack "
-                                 "(same soundness bound as ragged prefill)")
-            from repro.models.lm import override_cache_pos
+                raise ValueError(errors.msg("prefix_ineligible",
+                                            name=self.cfg.name))
             local = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                  self._cache_template(1))
-            # the splice path = pos rewind + batch-1 suffix decode; compile
-            # both so the first prefix hit isn't charged compile time
-            local = override_cache_pos(local, jnp.zeros((1,), jnp.int32))
+            # the splice path = pos rewind (KV contract only) + batch-1
+            # suffix decode; compile both so the first prefix hit isn't
+            # charged compile time
+            if self.contract != "recurrent":
+                from repro.models.lm import override_cache_pos
+                local = override_cache_pos(local, jnp.zeros((1,), jnp.int32))
             self._decode1(self.params, jnp.zeros((1, 1), jnp.int32), local)
         reqs = []
         for i, b in enumerate(sorted({self._bucket(p)
@@ -395,8 +454,7 @@ def run_static_trace(model, params, requests: List[Request], *,
     batch finishes — the batch barrier continuous batching removes."""
     cfg = model.cfg
     if set(cfg.layer_kinds) != {"attn"}:
-        raise ValueError("static ragged baseline needs a pure global-"
-                         "attention stack (batched ragged prefill)")
+        raise ValueError(errors.msg("static_trace_ineligible"))
     buckets = sorted(buckets) if buckets else default_buckets(max_len)
     vocab = cfg.vocab_size
 
@@ -469,7 +527,8 @@ def synthetic_trace(n: int, vocab: int, *, seed: int = 0,
                     prompt_range=(8, 48), gen_range=(4, 48),
                     rate: Optional[float] = None,
                     deadline_range=None, deadline_frac: float = 1.0,
-                    prefix_len: int = 0) -> List[Request]:
+                    prefix_len: int = 0, mem_len: Optional[int] = None,
+                    d_model: int = 0) -> List[Request]:
     """Ragged arrival trace: mixed prompt/gen lengths, optional Poisson
     arrivals at ``rate`` req/s (default: all available at t=0).
 
@@ -484,12 +543,15 @@ def synthetic_trace(n: int, vocab: int, *, seed: int = 0,
     rest run un-deadlined — the "deadline mix"). ``prefix_len > 0``
     prepends one shared system prompt of that many tokens to every request
     (``prompt_range`` then sizes the per-request *suffix*) — the
-    prefix-cache workload.
+    prefix-cache workload. ``mem_len`` (with ``d_model``) attaches
+    per-request encoder-memory frames of that fixed length — the enc-dec
+    workload (``ServeEngine(mem_len=...)``).
     """
     rng_arr = _substream(seed, 1)
     rng_len = _substream(seed, 2)
     rng_tok = _substream(seed, 3)
     rng_dl = _substream(seed, 4)
+    rng_fr = _substream(seed, 5)
     arrivals = np.zeros(n) if rate is None else \
         np.cumsum(rng_arr.exponential(1.0 / rate, size=n))
     shared = rng_tok.randint(0, vocab, size=prefix_len).astype(np.int32) \
@@ -506,8 +568,13 @@ def synthetic_trace(n: int, vocab: int, *, seed: int = 0,
             budget = float(rng_dl.uniform(*deadline_range))
             if rng_dl.uniform() < deadline_frac:
                 deadline = float(arrivals[i]) + budget
+        frames = None
+        if mem_len is not None:
+            assert d_model > 0, "mem_len= needs d_model="
+            frames = rng_fr.randn(mem_len, d_model).astype(np.float32)
         reqs.append(Request(rid=i, tokens=toks, gen=G,
-                            arrival=float(arrivals[i]), deadline=deadline))
+                            arrival=float(arrivals[i]), deadline=deadline,
+                            frames=frames))
     return reqs
 
 

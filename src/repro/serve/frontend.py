@@ -44,6 +44,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.serve import errors
 from repro.serve.engine import Request
 from repro.serve.queue import AdmissionQueue, Overloaded, Status, TERMINAL
 
@@ -116,10 +117,8 @@ class ServeFrontend:
         self.queue = AdmissionQueue(queue_depth, policy=policy)
         self.prefix_cache = prefix_cache
         if prefix_cache is not None and not engine.prefix_eligible():
-            raise ValueError(
-                f"{engine.cfg.name}: prefix cache needs a pure global-"
-                "attention LM stack (same soundness bound as ragged "
-                "prefill); serve without one")
+            raise ValueError(errors.msg("prefix_ineligible",
+                                        name=engine.cfg.name))
         if clock is None:
             t0 = time.perf_counter()
             clock = lambda: time.perf_counter() - t0  # noqa: E731

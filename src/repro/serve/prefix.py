@@ -13,9 +13,11 @@ cache a fresh prefill of that prefix would produce — reuse is a ``pos``
 rewind (``override_cache_pos`` to the hit length; stale rows beyond it are
 masked by ``key_idx <= pos`` and overwritten as decode proceeds), followed
 by per-token decode steps over only the un-cached suffix. Sliding-window
-ring buffers and recurrent states violate the row-locality premise, so the
-engine only consults this cache when ``ragged_ok`` (it falls back to a full
-prefill otherwise).
+ring buffers violate the row-locality premise, so the engine only consults
+this cache on replayable contracts (docs/serving.md "Slot-cache
+contracts"); recurrent stacks use it in *whole-entry* mode — their entries
+are state snapshots, reusable as-is but never rewindable
+(``usable_prefix_len``).
 
 Entries are whole device-resident cache pytrees (``(1, max_len, ...)`` per
 leaf), so capacity is small and LRU: ``cap`` entries, least-recently-hit
@@ -47,6 +49,25 @@ def common_prefix_len(a: np.ndarray, b: np.ndarray) -> int:
     return int(neq[0]) if len(neq) else n
 
 
+def usable_prefix_len(entry_tokens: np.ndarray, tokens: np.ndarray,
+                      whole_entry: bool = False) -> int:
+    """How many leading ``tokens`` an entry for ``entry_tokens`` covers.
+
+    Capped at ``len(tokens) - 1`` so at least one prompt token always runs
+    through the model (its logits produce the first generated token).
+
+    ``whole_entry=True`` is the *recurrent* contract: a KV cache can be
+    rewound to any row (row ``i`` is a pure function of tokens ``<= i``),
+    but a recurrent state is one lossy summary of everything the entry
+    consumed — it is reusable only as-is, i.e. when the entry's full prompt
+    is a proper prefix of the new one. Partial overlaps return 0.
+    """
+    L = min(common_prefix_len(entry_tokens, tokens), len(tokens) - 1)
+    if whole_entry and L < len(entry_tokens):
+        return 0
+    return L
+
+
 class PrefixCache:
     """LRU over recent prefill caches, looked up by longest shared prefix.
 
@@ -75,22 +96,24 @@ class PrefixCache:
     def _key(tokens: np.ndarray) -> bytes:
         return np.asarray(tokens, np.int32).tobytes()
 
-    def lookup(self, tokens) -> Optional[Tuple[PrefixEntry, int]]:
+    def lookup(self, tokens,
+               whole_entry: bool = False) -> Optional[Tuple[PrefixEntry, int]]:
         """Best reusable entry for a new prompt, or None.
 
         Returns ``(entry, L)`` with ``L`` the number of leading prompt
         tokens covered by the entry — capped at ``len(tokens) - 1`` so at
         least one prompt token always runs through the model (its logits
-        produce the first generated token). Counts a hit/miss and refreshes
-        the hit entry's LRU position.
+        produce the first generated token). ``whole_entry=True`` restricts
+        matches to entries fully covered by the prompt (the recurrent
+        state-snapshot contract, see ``usable_prefix_len``). Counts a
+        hit/miss and refreshes the hit entry's LRU position.
         """
         tokens = np.asarray(tokens, np.int32)
         best, best_key, best_len = None, None, 0
         for key, e in self._entries.items():
-            L = common_prefix_len(e.tokens, tokens)
+            L = usable_prefix_len(e.tokens, tokens, whole_entry)
             if L > best_len:
                 best, best_key, best_len = e, key, L
-        best_len = min(best_len, len(tokens) - 1)
         if best is None or best_len < self.min_hit:
             self.misses += 1
             return None

@@ -54,8 +54,9 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.serve import errors
 from repro.serve.engine import Completion, Request
-from repro.serve.prefix import PrefixCache, common_prefix_len
+from repro.serve.prefix import PrefixCache, usable_prefix_len
 
 ROUTES = ("least-loaded", "prefix-affinity")
 
@@ -125,18 +126,21 @@ class ReplicaRouter:
     def __init__(self, engines: List, *, route: str = "least-loaded",
                  prefix_cap: int = 0, min_hit: int = 4):
         if not engines:
-            raise ValueError("ReplicaRouter needs at least one engine")
+            raise ValueError(errors.msg("router_needs_engines"))
         if route not in ROUTES:
-            raise ValueError(f"unknown route {route!r}; known: {ROUTES}")
+            raise ValueError(errors.msg("unknown_route", route=route,
+                                        routes=ROUTES))
         self.route = route
         self.replicas = [_Replica(e) for e in engines]
+        # recurrent replicas hold state snapshots, reusable whole-entry
+        # only (serve/prefix.py) — affinity must score them the same way
+        self._whole_entry = getattr(engines[0], "contract",
+                                    "kv") == "recurrent"
         self._caches: Optional[List[PrefixCache]] = None
         if route == "prefix-affinity":
             if not engines[0].prefix_eligible():
-                raise ValueError(
-                    f"{engines[0].cfg.name}: prefix-affinity routing needs "
-                    "a pure global-attention LM stack (same soundness "
-                    "bound as ragged prefill); route least-loaded instead")
+                raise ValueError(errors.msg("affinity_ineligible",
+                                            name=engines[0].cfg.name))
             self._caches = [PrefixCache(cap=prefix_cap or 8,
                                         min_hit=min_hit)
                             for _ in engines]
@@ -218,8 +222,8 @@ class ReplicaRouter:
             best, best_len = None, 0
             for i in cand:
                 for e in self._caches[i]._entries.values():
-                    L = min(common_prefix_len(e.tokens, toks),
-                            len(toks) - 1)
+                    L = usable_prefix_len(e.tokens, toks,
+                                          self._whole_entry)
                     if L >= self._caches[i].min_hit and L > best_len:
                         best, best_len = i, L
             if best is not None:

@@ -66,6 +66,7 @@ class FleetFakeEngine:
     slot, ``step_time`` seconds of (GIL-releasing) wall time per step."""
 
     cfg = _FakeCfg()
+    contract = "kv"                # slot-cache contract (docs/serving.md)
 
     def __init__(self, n_slots: int, *, step_time: float = 0.0,
                  prefix_ok: bool = False):
@@ -149,6 +150,74 @@ class FleetFakeEngine:
         s.rid, s.req, s.remaining = -1, None, 0
         self.stats["cancels"] += 1
         return partial
+
+
+FAKE_STATE_SIZE = 4                # fixed per-slot state width (recurrent)
+
+
+class RecurrentFleetFakeEngine(FleetFakeEngine):
+    """``FleetFakeEngine`` honouring the *recurrent* slot-cache contract
+    (docs/serving.md "Slot-cache contracts"): per-slot state is a
+    fixed-size vector written wholesale at admit (the state scatter),
+    advanced by ONE shared recurrent step per ``decode_step``, and zeroed
+    at retire/cancel — never grown. The state encodes
+    ``(rid + 1, tokens processed)`` injectively, so ``check_state`` can
+    detect by value every contract violation the property suites hunt:
+    state growth, a missed reset (stale state visible to the next admit),
+    and cross-slot/cross-replica contamination."""
+
+    contract = "recurrent"
+
+    def __init__(self, n_slots: int, **kw):
+        super().__init__(n_slots, **kw)
+        self.state = [self._zero() for _ in range(n_slots)]
+
+    @staticmethod
+    def _zero():
+        return [0] * FAKE_STATE_SIZE
+
+    def admit(self, req, slot: int, prefix_cache=None):
+        assert self.state[slot] == self._zero(), \
+            f"admit into slot {slot} over stale recurrent state"
+        super().admit(req, slot, prefix_cache=prefix_cache)
+        # scatter: the whole prompt + the prefill token, processed at once
+        self.state[slot] = [req.rid + 1, len(req.tokens) + 1] \
+            + [0] * (FAKE_STATE_SIZE - 2)
+
+    def decode_step(self) -> List[int]:
+        stepped = [i for i, s in enumerate(self.slots)
+                   if not s.free and s.remaining > 0]
+        retired = super().decode_step()
+        for i in stepped:                  # the one shared recurrent step
+            self.state[i][1] += 1
+        return retired
+
+    def retire(self, slot: int):
+        comp = super().retire(slot)
+        self.state[slot] = self._zero()    # contract: reset, not dangle
+        return comp
+
+    def cancel(self, slot: int) -> List[int]:
+        partial = super().cancel(slot)
+        self.state[slot] = self._zero()
+        return partial
+
+    def check_state(self):
+        """Assert the recurrent contract on the spot: constant state
+        size, zeroed state on every free slot, and each occupied slot's
+        state attributing exactly its own request at exactly its own
+        position (prompt + emitted tokens)."""
+        assert len(self.state) == self.n_slots
+        for i, (s, st) in enumerate(zip(self.slots, self.state)):
+            assert len(st) == FAKE_STATE_SIZE, \
+                f"slot {i}: state grew to {len(st)}"
+            if s.free:
+                assert st == self._zero(), f"slot {i}: stale state {st}"
+            else:
+                want = [s.rid + 1, len(s.req.tokens) + len(s.out)] \
+                    + [0] * (FAKE_STATE_SIZE - 2)
+                assert st == want, \
+                    f"slot {i}: state {st} != expected {want}"
 
 
 class ManualClock:

@@ -51,5 +51,24 @@ def out_of(model, params, batch):
     return y[0] if isinstance(y, tuple) else y
 
 
+def greedy_chain_ok(model, params, req, out_tokens):
+    """Greedy self-consistency via ONE full forward: feed prompt + generated
+    tokens, and every generated token must equal the argmax at the position
+    that produced it (causality makes this equivalent to a stepwise
+    rollout). ``req`` is a serve Request (``frames`` ride along for
+    enc-dec)."""
+    cfg = model.cfg
+    P = len(req.tokens)
+    seq = np.concatenate([np.asarray(req.tokens, np.int32),
+                          np.asarray(out_tokens[:-1], np.int32)])
+    batch = {"tokens": jnp.asarray(seq)[None]}
+    if getattr(req, "frames", None) is not None:
+        batch["frames"] = jnp.asarray(req.frames)[None]
+    logits = model.apply(params, batch)[0]
+    pred = np.asarray(jnp.argmax(logits[0, :, : cfg.vocab_size], axis=-1))
+    want = pred[P - 1: P - 1 + len(out_tokens)]
+    return list(want) == [int(t) for t in out_tokens]
+
+
 def mse(a, b):
     return float(jnp.mean(jnp.square((a - b).astype(jnp.float32))))

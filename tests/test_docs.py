@@ -147,6 +147,24 @@ def test_frontend_flags_documented():
         assert needle in serving, needle
 
 
+def test_zoo_serving_flags_documented():
+    """The config-zoo serving flags must exist in their CLIs and be
+    documented in cli.md, and serving.md must carry the slot-cache
+    contracts section the zoo matrix and engine dispatch rely on
+    (belt-and-braces on top of the generic two-direction coverage)."""
+    assert "--expert-sparsity" in _prune_flags()
+    assert {"--expert-sparsity", "--mem-len"} <= _serve_flags()
+    cli = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
+    for f in ("--expert-sparsity", "--mem-len"):
+        assert f"`{f}`" in cli, f
+    serving = open(os.path.join(ROOT, "docs", "serving.md"),
+                   encoding="utf-8").read()
+    assert "## Slot-cache contracts" in serving
+    for needle in ("recurrent", "mem_len", "expert", "cache_contract",
+                   "errors.py"):
+        assert needle in serving, needle
+
+
 def test_readme_documents_subprocess_marker():
     """README must explain deselecting the environment-sensitive
     subprocess tests (`-m "not subprocess"`)."""

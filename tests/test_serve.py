@@ -17,7 +17,8 @@ from repro.models import build_model
 from repro.serve import ServeEngine, synthetic_trace
 from repro.serve.engine import Request
 
-from helpers import calib_factory, tiny_cfg
+from helpers import calib_factory, greedy_chain_ok as _greedy_chain_ok, \
+    tiny_cfg
 
 
 def _lm_cfg():
@@ -33,24 +34,6 @@ def trained_lm():
     params, _, _ = train(cfg, steps=25, batch=8, seq=32, ckpt_dir=None,
                          peak_lr=2e-3, log=lambda *a: None)
     return cfg, build_model(cfg), params
-
-
-def _greedy_chain_ok(model, params, req, out_tokens):
-    """Greedy self-consistency via ONE full forward: feed prompt + generated
-    tokens, and every generated token must equal the argmax at the position
-    that produced it (causality makes this equivalent to a stepwise
-    rollout)."""
-    cfg = model.cfg
-    P = len(req.tokens)
-    seq = np.concatenate([np.asarray(req.tokens, np.int32),
-                          np.asarray(out_tokens[:-1], np.int32)])
-    batch = {"tokens": jnp.asarray(seq)[None]}
-    if getattr(req, "frames", None) is not None:
-        batch["frames"] = jnp.asarray(req.frames)[None]
-    logits = model.apply(params, batch)[0]
-    pred = np.asarray(jnp.argmax(logits[0, :, : cfg.vocab_size], axis=-1))
-    want = pred[P - 1: P - 1 + len(out_tokens)]
-    return list(want) == [int(t) for t in out_tokens]
 
 
 # ---------------------------------------------------------------------------

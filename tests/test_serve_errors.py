@@ -1,0 +1,105 @@
+"""Guards for the single-source-of-truth rejection table (serve/errors.py).
+
+Two invariants keep the engine's refusal text and the test suite's
+expectations from drifting apart:
+
+1. every template formats cleanly (no stale placeholders, no collisions),
+   and ``msg`` refuses unknown keys and missing placeholders loudly;
+2. no other test file re-inlines a table message as a string literal on a
+   ``pytest.raises(match=...)`` or ``xfail(reason=...)`` line — those must
+   be BUILT from ``errors.msg`` so renaming an entry updates both sides.
+
+The scan keys on each template's longest literal fragment (placeholders
+stripped), so prose in docstrings/comments stays free to *describe* the
+refusals; only assertion lines are constrained.
+"""
+from __future__ import annotations
+
+import pathlib
+import string
+
+import pytest
+
+from repro.serve import errors
+
+_FMT = string.Formatter()
+
+
+def _placeholders(template):
+    return [f for _, f, _, _ in _FMT.parse(template) if f is not None]
+
+
+def _dummy_kwargs(template):
+    # ints satisfy both {x} and {x!r}/{x:d}-style fields
+    return {f.split("!")[0].split(":")[0].split(".")[0].split("[")[0]: 7
+            for f in _placeholders(template)}
+
+
+def _literal_fragments(template):
+    return [lit for lit, _, _, _ in _FMT.parse(template) if lit]
+
+
+def test_every_template_formats_cleanly():
+    seen = set()
+    for key, template in errors.ERRORS.items():
+        m = errors.msg(key, **_dummy_kwargs(template))
+        assert m and not m.isspace(), key
+        assert "{" not in m and "}" not in m, f"{key}: stale placeholder"
+        assert m not in seen, f"{key}: collides with another entry"
+        seen.add(m)
+
+
+def test_msg_raises_on_unknown_key_and_stale_placeholder():
+    with pytest.raises(KeyError):
+        errors.msg("definitely_not_a_refusal")
+    # a call site that forgets a placeholder must fail loudly, not emit
+    # a half-formatted message
+    keyed = [k for k, t in errors.ERRORS.items() if _placeholders(t)]
+    assert keyed, "table unexpectedly placeholder-free"
+    with pytest.raises((KeyError, IndexError)):
+        errors.msg(keyed[0])
+
+
+def test_no_test_file_reinlines_a_table_message():
+    """The drift guard: the longest literal fragment of every template
+    (>= 12 chars, so generic words like 'slot' don't trip it) must not
+    appear on any ``match=`` / ``reason=`` line of another test file."""
+    fragments = {}
+    for key, template in errors.ERRORS.items():
+        lits = [f for f in _literal_fragments(template)
+                if len(f.strip()) >= 12]
+        if lits:
+            fragments[key] = max(lits, key=len)
+    assert len(fragments) >= 8       # the table is substantially guarded
+    here = pathlib.Path(__file__)
+    offenders = []
+    for path in sorted(here.parent.glob("*.py")):
+        if path == here:
+            continue
+        for ln, line in enumerate(path.read_text().splitlines(), 1):
+            if "match=" not in line and "reason=" not in line:
+                continue
+            for key, frag in fragments.items():
+                if frag in line:
+                    offenders.append(f"{path.name}:{ln} inlines "
+                                     f"{key!r} ({frag!r})")
+    assert not offenders, "\n".join(
+        ["build these from repro.serve.errors.msg instead:"] + offenders)
+
+
+def test_table_is_the_only_message_source_in_serve():
+    """No serve module (besides errors.py itself) may carry a table
+    message as a literal — every raise goes through ``errors.msg``."""
+    fragments = {k: max((f for f in _literal_fragments(t)
+                         if len(f.strip()) >= 12), key=len, default=None)
+                 for k, t in errors.ERRORS.items()}
+    src = pathlib.Path(errors.__file__).parent
+    offenders = []
+    for path in sorted(src.glob("*.py")):
+        if path.name == "errors.py":
+            continue
+        text = path.read_text()
+        for key, frag in fragments.items():
+            if frag and frag in text:
+                offenders.append(f"{path.name} inlines {key!r}")
+    assert not offenders, offenders

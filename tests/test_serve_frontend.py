@@ -12,6 +12,7 @@ and that the freed slot is refilled.
 from __future__ import annotations
 
 import asyncio
+import re
 
 import jax
 import numpy as np
@@ -20,8 +21,8 @@ import pytest
 from helpers import tiny_cfg
 from repro.models import build_model
 from repro.serve import (AsyncServeFrontend, Overloaded, PrefixCache,
-                         ServeEngine, ServeFrontend, Status, frontend_table,
-                         synthetic_trace)
+                         ServeEngine, ServeFrontend, Status, errors,
+                         frontend_table, synthetic_trace)
 from repro.serve.engine import Request
 from repro.serve.testing import FleetFakeEngine
 
@@ -357,9 +358,10 @@ def test_prefix_cache_rejected_for_ineligible_stack():
     eng = ServeEngine(model, model.init(jax.random.PRNGKey(0)),
                       n_slots=1, max_len=48)
     assert not eng.prefix_eligible()
-    with pytest.raises(ValueError, match="pure global-attention"):
+    refusal = re.escape(errors.msg("prefix_ineligible", name=cfg.name))
+    with pytest.raises(ValueError, match=refusal):
         ServeFrontend(eng, prefix_cache=PrefixCache())
-    with pytest.raises(ValueError, match="pure global-attention"):
+    with pytest.raises(ValueError, match=refusal):
         eng.warmup(prompt_lens=[8], prefix=True)
 
 
@@ -419,7 +421,10 @@ def test_warmup_compiles_prefix_path(lm):
 def test_engine_admit_and_cancel_guards(lm):
     eng = _engine(lm, n_slots=1, max_len=16)
     eng.begin()
-    with pytest.raises(ValueError, match="exceeds max_len"):
+    with pytest.raises(ValueError, match=re.escape(
+            errors.msg("request_exceeds_max_len", rid=0, prompt=12, gen=8,
+                       max_len=16))):
         eng.admit(_req(0, 12, 8), 0)              # 12 + 8 > 16
-    with pytest.raises(ValueError, match="slot"):
+    with pytest.raises(ValueError, match=re.escape(
+            errors.msg("cancel_free_slot", slot=0))):
         eng.cancel(0)                             # nothing running there

@@ -62,6 +62,8 @@ class FakeEngine:
     class cfg:
         name, family = "fake", "lm"
 
+    contract = "kv"
+
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
         self.slots = [_FakeSlot() for _ in range(n_slots)]
@@ -112,6 +114,58 @@ class FakeEngine:
         partial = list(s.out)
         s.rid, s.req, s.remaining = -1, None, 0
         return partial
+
+
+FAKE_STATE_SIZE = 4                # fixed per-slot state width (recurrent)
+
+
+class RecurrentFakeEngine(FakeEngine):
+    """``FakeEngine`` under the *recurrent* slot-cache contract (docs/
+    serving.md "Slot-cache contracts"): per-slot state is a fixed-size
+    vector written wholesale at admit (the state scatter), advanced by
+    ONE shared recurrent step per ``decode_step``, zeroed at retire and
+    cancel, and never grown. The state encodes ``(rid + 1, tokens
+    processed)`` injectively so the dict-level oracle can verify it by
+    value — growth, a missed reset, or cross-slot contamination all
+    change the vector."""
+
+    contract = "recurrent"
+
+    def __init__(self, n_slots: int):
+        super().__init__(n_slots)
+        self.state = [self._zero() for _ in range(n_slots)]
+
+    @staticmethod
+    def _zero():
+        return [0] * FAKE_STATE_SIZE
+
+    def admit(self, req, slot, prefix_cache=None):
+        assert self.state[slot] == self._zero(), \
+            f"admit into slot {slot} over stale recurrent state"
+        super().admit(req, slot, prefix_cache=prefix_cache)
+        self.state[slot] = [req.rid + 1, len(req.tokens) + 1] \
+            + [0] * (FAKE_STATE_SIZE - 2)
+
+    def decode_step(self):
+        stepped = [i for i, s in enumerate(self.slots)
+                   if not s.free and s.remaining > 0]
+        retired = super().decode_step()
+        for i in stepped:                  # the one shared recurrent step
+            self.state[i][1] += 1
+        return retired
+
+    def retire(self, slot):
+        comp = super().retire(slot)
+        self.state[slot] = self._zero()
+        return comp
+
+    def cancel(self, slot):
+        partial = super().cancel(slot)
+        self.state[slot] = self._zero()
+        return partial
+
+
+FAKES = {"kv": FakeEngine, "recurrent": RecurrentFakeEngine}
 
 
 class ManualClock:
@@ -211,6 +265,19 @@ class Oracle:
             self.free = sorted(self.free + [r["slot"]])
             self.final[rid] = ("done", r["ntok"])
 
+    def expected_state(self, n_slots):
+        """Recurrent-contract projection of the oracle's own dicts: what
+        every slot's fixed-size state vector must be *right now* — zeros
+        when free (reset on retire/cancel/expiry), ``(rid + 1,
+        plen + ntok)`` while occupied. Derived without ever looking at
+        the engine, so a missed reset, state growth, or cross-slot
+        contamination in the engine fails the comparison."""
+        state = [[0] * FAKE_STATE_SIZE for _ in range(n_slots)]
+        for rid, r in self.running.items():
+            state[r["slot"]] = [rid + 1, self.reqs[rid][1] + r["ntok"]] \
+                + [0] * (FAKE_STATE_SIZE - 2)
+        return state
+
 
 # ---------------------------------------------------------------------------
 # random-sequence driver
@@ -221,11 +288,11 @@ STATUS_NAME = {Status.DONE: "done", Status.REJECTED: "rejected",
 
 
 def _run_sequence(seed, n_slots, depth, policy, n_actions=18,
-                  deadline_prob=0.35):
+                  deadline_prob=0.35, engine_cls=FakeEngine):
     """Drive frontend (production code, FakeEngine) and oracle through the
     same random action sequence; return both plus instrumentation."""
     rng = random.Random(seed)
-    eng = FakeEngine(n_slots)
+    eng = engine_cls(n_slots)
     clk = ManualClock()
     fe = ServeFrontend(eng, queue_depth=depth, policy=policy, clock=clk)
     oracle = Oracle(n_slots, depth, policy)
@@ -273,12 +340,19 @@ def _run_sequence(seed, n_slots, depth, policy, n_actions=18,
                 fe.cancel(victim)
                 oracle.cancel(victim)
         assert len(fe._by_slot) <= n_slots
+        if eng.contract == "recurrent":
+            # the recurrent-state contract, checked after EVERY action:
+            # constant size, reset on retire/cancel/expiry, no cross-slot
+            # contamination (the oracle projects the expected vectors)
+            assert eng.state == oracle.expected_state(n_slots)
 
     # drain: no deadline outlives a big jump, so every survivor terminates
     clk.advance(1e6)
     for _ in range(64):
         busy = fe.step()
         oracle.step(clk.t)
+        if eng.contract == "recurrent":
+            assert eng.state == oracle.expected_state(n_slots)
         if not busy:
             break
     else:                                   # pragma: no cover - deadlock
@@ -327,10 +401,14 @@ def _check_invariants(fe, eng, oracle, terminal_log, admit_log):
 @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
        n_slots=st.integers(min_value=1, max_value=3),
        depth=st.integers(min_value=0, max_value=4),
-       policy=st.sampled_from(("fifo", "spf")))
-def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy):
-    """>= 50 random action sequences: production scheduler == oracle."""
-    _check_invariants(*_run_sequence(seed, n_slots, depth, policy))
+       policy=st.sampled_from(("fifo", "spf")),
+       fake=st.sampled_from(("kv", "recurrent")))
+def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy, fake):
+    """>= 50 random action sequences: production scheduler == oracle,
+    under both slot-cache contracts (the recurrent fake additionally
+    checks its state vectors against the oracle after every action)."""
+    _check_invariants(*_run_sequence(seed, n_slots, depth, policy,
+                                     engine_cls=FAKES[fake]))
 
 
 @settings(max_examples=60)
@@ -531,7 +609,10 @@ def test_admission_queue_validation_and_removal():
 # contamination (fleet_token attribution).
 
 from repro.serve import ReplicaRouter, ReplicaState  # noqa: E402
-from repro.serve.testing import FleetFakeEngine, fleet_token  # noqa: E402
+from repro.serve.testing import (FleetFakeEngine,  # noqa: E402
+                                 RecurrentFleetFakeEngine, fleet_token)
+
+FLEET_FAKES = {"kv": FleetFakeEngine, "recurrent": RecurrentFleetFakeEngine}
 
 
 class FleetOracle:
@@ -624,11 +705,12 @@ class FleetOracle:
             self.final[rid] = ("done", r["ntok"])
 
 
-def _run_fleet_sequence(seed, n_replicas, slots_per, n_actions=22):
+def _run_fleet_sequence(seed, n_replicas, slots_per, n_actions=22,
+                        engine_cls=FleetFakeEngine):
     """Drive the production ReplicaRouter and the fleet oracle through the
     same random submit/step/cancel/kill/drain sequence."""
     rng = random.Random(seed)
-    engines = [FleetFakeEngine(slots_per) for _ in range(n_replicas)]
+    engines = [engine_cls(slots_per) for _ in range(n_replicas)]
     router = ReplicaRouter(engines)
     oracle = FleetOracle(n_replicas, slots_per)
 
@@ -696,11 +778,17 @@ def _run_fleet_sequence(seed, n_replicas, slots_per, n_actions=22):
             oracle.drain(i)
         assert len(router.free_slots()) == oracle.capacity(), \
             "fleet capacity diverged from oracle"
+        if engine_cls.contract == "recurrent":
+            for e in engines:               # per-replica state contract
+                e.check_state()
 
     for _ in range(300):                    # drain every survivor
         if router.active_count() == 0:
             break
         do_step()
+        if engine_cls.contract == "recurrent":
+            for e in engines:
+                e.check_state()
     else:                                   # pragma: no cover - deadlock
         raise AssertionError("fleet failed to drain in 300 steps")
     return router, engines, oracle, record, admit_log
@@ -742,12 +830,41 @@ def _check_fleet_invariants(router, engines, oracle, record, admit_log):
 @settings(max_examples=60)
 @given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
        n_replicas=st.integers(min_value=1, max_value=3),
-       slots_per=st.integers(min_value=1, max_value=2))
-def test_fleet_lifecycle_matches_oracle(seed, n_replicas, slots_per):
+       slots_per=st.integers(min_value=1, max_value=2),
+       fake=st.sampled_from(("kv", "recurrent")))
+def test_fleet_lifecycle_matches_oracle(seed, n_replicas, slots_per, fake):
     """>= 60 random submit/step/cancel/kill/drain sequences: production
-    router == fleet oracle (statuses, token counts, routing argmin)."""
+    router == fleet oracle (statuses, token counts, routing argmin),
+    under both slot-cache contracts; the recurrent fleet fake checks its
+    per-slot state vectors (constant size, reset on retire/cancel, no
+    cross-slot contamination) after every action."""
     _check_fleet_invariants(
-        *_run_fleet_sequence(seed, n_replicas, slots_per))
+        *_run_fleet_sequence(seed, n_replicas, slots_per,
+                             engine_cls=FLEET_FAKES[fake]))
+
+
+def test_recurrent_fake_resets_and_rejects_stale_state():
+    """Unit pin of the recurrent contract the fakes enforce: admit
+    scatters state, each decode advances it by exactly one, retire and
+    cancel zero it, and an admit over un-reset state is an error."""
+    eng = RecurrentFleetFakeEngine(2)
+    eng.admit(Request(rid=0, tokens=np.arange(3, dtype=np.int32), gen=3), 0)
+    eng.check_state()
+    assert eng.state[0][:2] == [1, 4] and eng.state[1] == eng._zero()
+    eng.decode_step()
+    assert eng.state[0][:2] == [1, 5]
+    eng.check_state()
+    eng.decode_step()
+    eng.retire(0)
+    assert eng.state[0] == eng._zero()      # reset, not dangling
+    eng.admit(Request(rid=1, tokens=np.arange(2, dtype=np.int32), gen=4), 1)
+    eng.cancel(1)
+    assert eng.state[1] == eng._zero()
+    eng.check_state()
+    eng.state[0] = [9, 9, 0, 0]             # simulate a missed reset
+    with pytest.raises(AssertionError, match="stale"):
+        eng.admit(Request(rid=2, tokens=np.arange(2, dtype=np.int32),
+                          gen=2), 0)
 
 
 def test_least_loaded_tie_breaks_by_replica_index():

@@ -11,6 +11,8 @@ single engine (the greedy-determinism argument, exercised on real math).
 """
 from __future__ import annotations
 
+import re
+
 import jax
 import numpy as np
 import pytest
@@ -18,9 +20,10 @@ import pytest
 from helpers import tiny_cfg
 from repro.models import build_model
 from repro.serve import (ReplicaRouter, ReplicaState, ServeEngine,
-                         ServeFrontend, Status, frontend_table,
+                         ServeFrontend, Status, errors, frontend_table,
                          synthetic_trace)
 from repro.serve.engine import Request
+from repro.serve.router import ROUTES
 from repro.serve.testing import FleetFakeEngine, ManualClock, fleet_token
 
 
@@ -43,12 +46,17 @@ def _stream(rid, n):
 # ---------------------------------------------------------------------------
 
 def test_router_validation():
-    with pytest.raises(ValueError, match="at least one engine"):
+    with pytest.raises(ValueError, match=re.escape(
+            errors.msg("router_needs_engines"))):
         ReplicaRouter([])
-    with pytest.raises(ValueError, match="unknown route"):
+    with pytest.raises(ValueError, match=re.escape(
+            errors.msg("unknown_route", route="round-robin",
+                       routes=ROUTES))):
         ReplicaRouter([FleetFakeEngine(1)], route="round-robin")
     # prefix-affinity needs a prefix-eligible stack
-    with pytest.raises(ValueError, match="prefix-affinity"):
+    with pytest.raises(ValueError, match=re.escape(
+            errors.msg("affinity_ineligible",
+                       name=FleetFakeEngine(1).cfg.name))):
         ReplicaRouter([FleetFakeEngine(1)], route="prefix-affinity")
     r = ReplicaRouter([FleetFakeEngine(1, prefix_ok=True)],
                       route="prefix-affinity")

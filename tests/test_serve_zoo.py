@@ -1,37 +1,53 @@
 """Config-zoo serving smoke: every LM config in ``repro.configs`` must
-admit one request and take two decode steps through the slot engine.
+admit one request and take two decode steps through the slot engine, and
+serve token-identical to its own full-sequence greedy forward.
 
 The zoo spans pure-attn, sliding-window, recurrent (rwkv), hybrid
 (jamba), MoE and enc-dec stacks; serving regressions historically hid in
-the configs the serve tests didn't cover. The *ragged/prefix* features are
-only sound on pure causal global attention — those gaps are expressed as
-``xfail(strict=True)`` entries whose reasons mirror the engine's actual
-``ValueError`` text, so a silently widening (or narrowing) feature surface
-flips a test and forces this file to be updated deliberately.
+the configs the serve tests didn't cover. The *ragged/prefix* features
+are sound exactly where the slot-cache contract is replayable (pure
+global-attention KV rewind, or whole-prefix recurrent state snapshots —
+docs/serving.md "slot-cache contracts"); the remaining gaps are
+``xfail(strict=True)`` entries whose reasons are BUILT from the shared
+``repro.serve.errors`` table, so the engine's refusal text and this
+matrix cannot drift apart — a silently widening (or narrowing) feature
+surface flips a test and forces this file to be updated deliberately.
 """
 from __future__ import annotations
+
+import re
 
 import jax
 import numpy as np
 import pytest
 
-from helpers import tiny_cfg
+from helpers import greedy_chain_ok, tiny_cfg
 from repro.configs import ARCH_IDS, DEIT_IDS
+from repro.serve import (PrefixCache, RecurrentSlotCache, ReplicaRouter,
+                         ServeEngine, ServeFrontend, Status, cache_contract)
+from repro.serve import errors
 from repro.models import build_model
-from repro.serve import (PrefixCache, ReplicaRouter, ServeEngine,
-                         ServeFrontend, Status)
 from repro.serve.engine import Request
 
 MEM_LEN = 8        # enc-dec encoder-memory length used throughout
 
-# configs whose stacks break the "cache row i is a pure function of tokens
-# <= i" premise; reasons mirror the engine's ValueError wording
-RAGGED_GAPS = {
-    "gemma3-1b": "swa ring buffer: needs a pure global-attention stack",
-    "rwkv6-3b": "recurrent state: needs a pure global-attention stack",
-    "jamba-1.5-large-398b": ("hybrid attn+ssm stack: needs a pure "
-                             "global-attention stack"),
+# configs with no replayable slot-cache contract (the swa ring buffer is
+# neither a rewindable KV nor a whole-prefix recurrent snapshot); the
+# xfail reason is the engine's own refusal, formatted from the shared
+# error table — literal duplication is rejected by tests/test_serve_errors
+PREFIX_GAPS = {
+    "gemma3-1b": "prefix_ineligible",
 }
+
+
+def _gap_reason(arch: str, key: str) -> str:
+    return errors.msg(key, name=tiny_cfg(arch).name)
+
+
+def _gap_params(key_for_prefix: str):
+    return [pytest.param(a, marks=pytest.mark.xfail(
+        reason=_gap_reason(a, key_for_prefix), strict=True))
+        if a in PREFIX_GAPS else a for a in ARCH_IDS]
 
 
 @pytest.fixture(scope="module")
@@ -81,15 +97,36 @@ def test_zoo_one_admit_two_decodes(zoo, arch):
     assert eng.slots[0].free
 
 
-@pytest.mark.parametrize(
-    "arch",
-    [pytest.param(a, marks=pytest.mark.xfail(
-        reason=RAGGED_GAPS[a], strict=True)) if a in RAGGED_GAPS
-     else a for a in ARCH_IDS])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_zoo_engine_full_forward_parity(zoo, arch):
+    """The serving oracle: every config's engine output is token-identical
+    to its own full-sequence greedy forward — across mixed prompt/gen
+    lengths so slots refill mid-flight (KV, recurrent-state, MoE and
+    cross-attn slot paths all covered by the one assertion)."""
+    model, params = zoo(arch)
+    cfg = model.cfg
+    rng = np.random.RandomState(7)
+    kw = {}
+    if cfg.family == "encdec":
+        kw["frames"] = rng.randn(MEM_LEN, cfg.d_model).astype(np.float32)
+    reqs = [Request(rid=i, tokens=rng.randint(
+        0, cfg.vocab_size, size=p).astype(np.int32), gen=g, **kw)
+        for i, (p, g) in enumerate([(5, 3), (9, 4), (4, 2)])]
+    eng = _engine(model, params, n_slots=2, max_len=32)
+    comps = eng.run(reqs)
+    assert eng.contract == cache_contract(cfg)
+    for req, c in zip(reqs, comps):
+        assert len(c.tokens) == req.gen
+        assert greedy_chain_ok(model, params, req, c.tokens), req.rid
+
+
+@pytest.mark.parametrize("arch", _gap_params("prefix_ineligible"))
 def test_zoo_prefix_cache_eligibility(zoo, arch):
-    """Prefix-cached serving works exactly where ragged prefill is sound;
-    everywhere else the front-end refuses the cache up front (xfail,
-    reason mirroring the ValueError)."""
+    """Prefix-cached serving works exactly where the slot-cache contract
+    is replayable — pure global-attention KV rewind OR whole-prefix
+    recurrent state snapshots (rwkv6/jamba); everywhere else the
+    front-end refuses the cache up front (xfail, reason formatted from
+    the shared error table)."""
     model, params = zoo(arch)
     eng = _engine(model, params, max_len=48)
     if model.cfg.family == "encdec":
@@ -107,6 +144,9 @@ def test_zoo_prefix_cache_eligibility(zoo, arch):
             pass
     assert all(h.status is Status.DONE for h in fe.handles.values())
     assert fe.prefix_cache.hits == 1              # second request reuses
+    if eng.contract == "recurrent":
+        assert isinstance(eng.slotcache, RecurrentSlotCache)
+        assert eng.stats["prefix_hits"] == 1
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
@@ -135,11 +175,7 @@ def test_zoo_routed_admit_two_decodes(zoo, arch):
     assert all(s.free for e in engines for s in e.slots)
 
 
-@pytest.mark.parametrize(
-    "arch",
-    [pytest.param(a, marks=pytest.mark.xfail(
-        reason=RAGGED_GAPS[a], strict=True)) if a in RAGGED_GAPS
-     else a for a in ARCH_IDS])
+@pytest.mark.parametrize("arch", _gap_params("affinity_ineligible"))
 def test_zoo_prefix_affinity_eligibility(zoo, arch):
     """Prefix-affinity routing is constructible exactly where the prefix
     cache is sound (the router refuses it elsewhere — xfail matrix), and
@@ -166,10 +202,34 @@ def test_zoo_prefix_affinity_eligibility(zoo, arch):
     assert router.rstats["affinity_hits"] == 1
 
 
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "jamba-1.5-large-398b"])
+def test_zoo_recurrent_slot_bytes_constant(zoo, arch):
+    """Recurrent slot state is O(1) in sequence budget: doubling max_len
+    must not grow a pure-recurrent stack's per-slot bytes at all, and a
+    hybrid's (jamba: attn rows still grow) strictly slower than a
+    pure-KV stack's — the serving win the recurrent contract buys;
+    bench_serve gates the same invariant with a KV reference column."""
+    model, params = zoo(arch)
+    small = _engine(model, params, max_len=32)
+    large = _engine(model, params, max_len=64)
+    assert small.contract == "recurrent"
+    growth = large.slotcache.slot_bytes / small.slotcache.slot_bytes
+    kv_model, kv_params = zoo("qwen2-1.5b")
+    kv_s = _engine(kv_model, kv_params, max_len=32)
+    kv_l = _engine(kv_model, kv_params, max_len=64)
+    kv_growth = kv_l.slotcache.slot_bytes / kv_s.slotcache.slot_bytes
+    if set(model.cfg.layer_kinds) <= {"rwkv", "mamba"}:
+        assert growth == 1.0                      # no KV rows at all
+    assert growth < kv_growth                     # strictly sublinear
+    assert kv_growth > 1.5                        # the KV reference grows
+
+
 @pytest.mark.parametrize("arch", DEIT_IDS[:1])
 def test_vit_has_no_serving_path(arch):
     cfg = tiny_cfg(arch)
     model = build_model(cfg)
-    with pytest.raises(ValueError, match="no serving path"):
+    with pytest.raises(ValueError, match=re.escape(
+            errors.msg("no_serving_path", name=cfg.name,
+                       family=cfg.family))):
         ServeEngine(model, model.init(jax.random.PRNGKey(0)),
                     n_slots=1, max_len=32)
