@@ -63,6 +63,16 @@ Config-zoo gates (ISSUE 8):
             forward at the smaller expert count, with the compensated
             fold inside parity tolerance of naive expert dropping.
 
+Sharded gate (ISSUE 9):
+
+  671B-class footprint — the FULL jamba-1.5-large-398b / deepseek-v3-671b
+            slot caches on a (data=2, model=8) mesh must be ~1/16 per
+            device (analytic: dict-mesh ``slot_specs`` over eval_shape
+            templates, no devices needed), with 50% CORP pruning
+            shrinking the hybrid's per-device cache strictly further.
+            The live-mesh mirror (token parity, measured shards, tok/s
+            scaling table) is benchmarks/bench_serve_sharded.py.
+
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_serve.py
       (--table-out routed_trace.md writes the routed-trace p50/p99 table)
 """
@@ -394,6 +404,68 @@ def gate_expert_pruned_serving():
           f"{len(comps)} pruned streams match the full forward")
 
 
+def gate_sharded_footprint():
+    """Mesh-sharded serving at 671B scale, analytically (ISSUE 9): the
+    per-device slot-cache bytes of the FULL ``jamba-1.5-large-398b`` and
+    ``deepseek-v3-671b`` configs on a (data=2, model=8) mesh must be
+    ~1/16 of the unsharded cache (``slot_specs`` never pads, so the split
+    is exact up to the replicated ``pos`` bookkeeping), and CORP pruning
+    at 50% must shrink the hybrid's per-device cache strictly further
+    (``eff_qk`` halves the K rows, ``d_inner_kept`` halves the SSM state
+    — MLA latent caches are eff_qk-independent, so deepseek-v3 shards
+    but does not shrink). Deviceless: specs come from the dict-mesh rule
+    path and bytes from ``jax.eval_shape`` templates, so a 671B-class
+    footprint is gated on single-device CPU CI; the live-mesh mirror of
+    this gate is benchmarks/bench_serve_sharded.py."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.serve import device_bytes_estimate, slot_specs
+    from repro.serve.cache import _infer_batch_axes, cache_bytes
+
+    mesh = {"data": 2, "model": 8}
+    n_dev = mesh["data"] * mesh["model"]
+    SLOTS_FULL, LEN_FULL = 8, 4096
+
+    def per_device(cfg):
+        model = build_model(cfg)
+        aparams = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+        def tmpl(b):
+            req = {"tokens": jax.ShapeDtypeStruct((b, 8), jnp.int32)}
+            return jax.eval_shape(
+                lambda p, r: model.prefill(p, r, LEN_FULL)[1], aparams, req)
+
+        t = tmpl(SLOTS_FULL)
+        axes = _infer_batch_axes(tmpl(1), tmpl(2))
+        specs = slot_specs(t, axes, mesh, name=cfg.name)
+        return cache_bytes(t), device_bytes_estimate(t, specs, mesh)
+
+    rows = []
+    devs = {}
+    for arch in ("jamba-1.5-large-398b", "deepseek-v3-671b"):
+        for label, cfg in (("dense", get_config(arch)),
+                           ("pruned 50%", get_config(arch).pruned(0.5, 0.5))):
+            total, dev = per_device(cfg)
+            devs[(arch, label)] = (total, dev)
+            rows.append({"config": f"{arch} {label}",
+                         "cache_gb": total / 2**30,
+                         "per_device_gb": dev / 2**30,
+                         "split": total / dev})
+    print(format_table(rows))
+    for (arch, label), (total, dev) in devs.items():
+        if label == "dense":
+            assert abs(dev - total / n_dev) <= 0.02 * total / n_dev, (
+                f"{arch}: per-device cache {dev} not ~1/{n_dev} "
+                f"of {total}")
+    jd, jp = devs[("jamba-1.5-large-398b", "dense")][1], \
+        devs[("jamba-1.5-large-398b", "pruned 50%")][1]
+    assert jp < jd, (
+        f"pruned jamba per-device cache not strictly smaller: {jp} >= {jd}")
+    print(f"[bench_serve] GATE sharded footprint: 671B-class caches split "
+          f"{n_dev}x per device on a 2x8 mesh, pruned jamba "
+          f"{jp / 2**30:.3f} < {jd / 2**30:.3f} GiB dense per device")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=24)
@@ -449,6 +521,10 @@ def main():
     # config-zoo gates (ISSUE 8)
     gate_recurrent_state_bytes()
     gate_expert_pruned_serving()
+
+    # mesh-sharded footprint gate (ISSUE 9; live mirror in
+    # benchmarks/bench_serve_sharded.py)
+    gate_sharded_footprint()
 
     # dense vs pruned serving table
     print(f"[bench_serve] CORP prune @ {args.sparsity:.0%}")

@@ -21,6 +21,13 @@ Calibration statistics get their own sharding contract (``stats_specs`` +
 over the model axis so a calibration pass never materialises a replicated
 full Sigma on any device (see docs/calibration.md and
 ``repro.core.calibrate.CalibrationEngine``).
+
+The serving slot cache likewise has its own contract
+(``repro.serve.sharding``: ``slot_specs`` + ``ServeSharding``), which
+composes with this module — a sharded ``ServeEngine`` places its params
+via ``param_specs``/``shardings_of`` on the same mesh its cache splits
+over. Both spec builders share the dict-mesh testability idiom pioneered
+by ``stats_specs`` below.
 """
 from __future__ import annotations
 

@@ -47,6 +47,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def parse_shape(spec: str):
+    """Parse a ``'DxM'`` mesh-shape string: ``'2x2'`` -> ``(2, 2)``.
+
+    The CLI grammar shared by ``repro.launch.prune --mesh`` and
+    ``repro.launch.serve --mesh-shape`` (axis names come from
+    ``make_mesh``'s defaults: trailing names of ('pod','data','model'))."""
+    return tuple(int(x) for x in spec.lower().split("x"))
+
+
 def make_mesh(shape, axes=None):
     """Arbitrary mesh for tests/examples (e.g. (2,4) on 8 host devices).
 

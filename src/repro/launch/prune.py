@@ -26,7 +26,7 @@ import jax
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.core import PruneConfig, corp_prune
 from repro.data import calib_stream
-from repro.launch.mesh import make_mesh
+from repro.launch.mesh import make_mesh, parse_shape
 from repro.launch.train import resolve_config
 from repro.models import build_model
 
@@ -153,8 +153,7 @@ def main():
     stream = calib_stream(cfg, n_samples=args.calib,
                           batch=args.calib_batch, seq=args.calib_seq)
 
-    ctx = make_mesh(tuple(int(x) for x in args.mesh.split("x"))) \
-        if args.mesh else None
+    ctx = make_mesh(parse_shape(args.mesh)) if args.mesh else None
     t0 = time.time()
     kw = dict(progress=print, ckpt_dir=args.calib_ckpt,
               ckpt_every=args.calib_ckpt_every,

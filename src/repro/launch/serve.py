@@ -87,7 +87,7 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                 rate=None, seed=0, compare_static=False, queue_depth=16,
                 deadline_ms=None, deadline_frac=1.0, prefix_cache=0,
                 prefix_len=0, spf=False, replicas=1, route="least-loaded",
-                mem_len=None, log=print):
+                mem_len=None, sharding=None, log=print):
     """Async front-end + continuous-batching engine over a synthetic trace.
 
     The trace drives the full serving stack: Poisson arrivals (``rate``),
@@ -103,6 +103,12 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
     Prefix caching in routed mode is per-replica and owned by the router
     (``route=prefix-affinity``); the front-end's shared cache is
     single-engine only.
+
+    With a ``sharding`` (``repro.serve.ServeSharding``, built from
+    ``--mesh-shape``/``--serve-sharded``) each engine's decode step runs
+    under pjit with the slot cache model-sharded; the report additionally
+    logs the per-device cache footprint (docs/serving.md "Mesh-sharded
+    serving").
     """
     from repro.serve import (PrefixCache, ReplicaRouter, ServeEngine,
                              ServeFrontend, frontend_table,
@@ -119,7 +125,7 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                             prefix_len=prefix_len, mem_len=mem_len,
                             d_model=cfg.d_model)
     engines = [ServeEngine(model, params, n_slots=slots, max_len=max_len,
-                           mem_len=mem_len)
+                           mem_len=mem_len, sharding=sharding)
                for _ in range(max(1, replicas))]
     for e in engines:
         e.warmup(prompt_lens=[len(r.tokens) for r in trace],
@@ -143,6 +149,12 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
         f"lane utilization "
         f"{eng.stats['decode_lanes'] / max(1, eng.stats['decode_steps'] * slots):.0%}, "
         f"cache {eng.cache_bytes / 1e6:.2f} MB")
+    if sharding is not None:
+        e0 = engines[0]
+        log(f"[serve] sharded over {dict(sharding.sizes)}: per-device "
+            f"cache {e0.device_cache_bytes / 1e6:.2f} MB "
+            f"({e0.cache_bytes / max(e0.device_cache_bytes, 1):.2f}x "
+            f"smaller than unsharded)")
     if replicas > 1:
         log(f"[serve] router: {dict(eng.rstats)}; "
             f"states {[s.value for s in eng.states]}")
@@ -222,7 +234,32 @@ def main():
                     help="fleet routing policy: fewest occupied slots, or "
                          "longest cached prefix (per-replica caches; pure "
                          "global-attention LMs only)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="device mesh shape 'DxM' (data x model) for "
+                         "--serve-sharded, e.g. 2x2; simulated host "
+                         "devices are forced to fill it on CPU")
+    ap.add_argument("--serve-sharded", action="store_true",
+                    help="run the shared decode step under pjit with the "
+                         "slot cache model-sharded over --mesh-shape "
+                         "(params placed by distrib.sharding.param_specs; "
+                         "requires --mesh-shape)")
     args = ap.parse_args()
+    if args.serve_sharded and not args.mesh_shape:
+        ap.error("--serve-sharded requires --mesh-shape")
+
+    sharding = None
+    if args.serve_sharded:
+        from repro.launch.mesh import (force_host_devices, make_mesh,
+                                       parse_shape)
+        from repro.serve import ServeSharding
+        shape = parse_shape(args.mesh_shape)
+        try:
+            # simulated-host story: fill the mesh with forced CPU devices
+            # (no-op when XLA_FLAGS already carries the flag)
+            force_host_devices(int(np.prod(shape)))
+        except RuntimeError:
+            pass   # backends already up: respect the ambient device set
+        sharding = ServeSharding(make_mesh(shape))
 
     cfg = resolve_config(args.arch)
     if args.sparsity > 0 or args.expert_sparsity > 0:
@@ -248,7 +285,7 @@ def main():
                     prefix_cache=args.prefix_cache,
                     prefix_len=args.prefix_len, spf=args.spf,
                     replicas=args.replicas, route=args.route,
-                    mem_len=args.mem_len)
+                    mem_len=args.mem_len, sharding=sharding)
     else:
         serve_loop(model, params, batch=args.batch,
                    prompt_len=args.prompt_len, gen=args.gen,

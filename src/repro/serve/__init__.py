@@ -14,10 +14,13 @@ from repro.serve.frontend import (AsyncServeFrontend, Handle, ServeFrontend,
 from repro.serve.prefix import PrefixCache
 from repro.serve.queue import AdmissionQueue, Overloaded, Status
 from repro.serve.router import ReplicaRouter, ReplicaState
+from repro.serve.sharding import (ServeSharding, device_bytes_estimate,
+                                  slot_specs)
 
 __all__ = ["SlotCache", "RecurrentSlotCache", "cache_bytes",
            "cache_contract", "ERRORS", "Request", "Completion",
            "ServeEngine", "run_static_trace", "synthetic_trace",
            "percentile_table", "ServeFrontend", "AsyncServeFrontend",
            "Handle", "frontend_table", "PrefixCache", "AdmissionQueue",
-           "Overloaded", "Status", "ReplicaRouter", "ReplicaState"]
+           "Overloaded", "Status", "ReplicaRouter", "ReplicaState",
+           "ServeSharding", "slot_specs", "device_bytes_estimate"]

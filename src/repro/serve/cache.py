@@ -77,21 +77,50 @@ class SlotCache:
     pass): ``template_fn(batch)`` must return the prefill-cache
     ShapeDtypeStruct tree at that batch size (time axis already padded to
     ``max_len``).
+
+    With a ``sharding`` (``serve.sharding.ServeSharding``) every leaf is
+    explicitly placed on the mesh: the inferred slot axis shards over the
+    data axis, payload dims over the model axis (``slot_specs`` — the
+    per-contract table in docs/serving.md). The donated per-slot scatter
+    is unchanged; pinning ``out_shardings`` keeps each write shard-local,
+    and the batch-1 ``local_specs`` (data-replicated, model-sharded) are
+    what the engine pins its prefill outputs to, so admit is a *sharded*
+    scatter: the local cache arrives already split over the model axis and
+    ``dynamic_update_index_in_dim`` runs per shard with no resharding.
     """
 
-    def __init__(self, template_fn, n_slots: int):
+    def __init__(self, template_fn, n_slots: int, *, sharding=None,
+                 name: str = "slot-cache"):
         self.n_slots = n_slots
         sds1, sds2 = template_fn(1), template_fn(2)
         self.batch_axes = _infer_batch_axes(sds1, sds2)
         self._template = template_fn(n_slots)
+        self.sharding = sharding
+        self.specs = self.local_specs = None
+        self._shardings = self._local_shardings = None
+        if sharding is not None:
+            from repro.distrib.sharding import shardings_of
+            from repro.serve.sharding import slot_specs
+            kw = dict(data_axis=sharding.data_axis,
+                      model_axis=sharding.model_axis, name=name)
+            self.specs = slot_specs(self._template, self.batch_axes,
+                                    sharding.mesh, **kw)
+            self.local_specs = slot_specs(sds1, self.batch_axes,
+                                          sharding.mesh, **kw)
+            self._shardings = shardings_of(self.specs, sharding.mesh)
+            self._local_shardings = shardings_of(self.local_specs,
+                                                 sharding.mesh)
         self.cache = self._zeros()
         # donate the global cache so XLA updates the slot rows in place
         # (the batch-1 local cache has different shapes, so it can't donate)
-        self._write = jax.jit(self._write_impl, donate_argnums=(0,))
+        self._write = jax.jit(self._write_impl, donate_argnums=(0,),
+                              out_shardings=self._shardings)
 
     def _zeros(self):
-        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                            self._template)
+        z = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         self._template)
+        return z if self._shardings is None else \
+            jax.device_put(z, self._shardings)
 
     def reset(self):
         """Drop all slot contents (e.g. after compile warmup)."""
@@ -118,6 +147,19 @@ class SlotCache:
         """Bytes one slot occupies (the per-request cache cost)."""
         return self.bytes // self.n_slots
 
+    @property
+    def device_bytes(self) -> int:
+        """Largest per-device resident bytes of the live cache — the number
+        mesh sharding exists for (== ``bytes`` unsharded). Measured from
+        the arrays' addressable shards, like the calibration footprint
+        gate (benchmarks/bench_calib_sharded.py)."""
+        total = 0
+        for leaf in jax.tree.leaves(self.cache):
+            shards = getattr(leaf, "addressable_shards", None)
+            total += max(s.data.nbytes for s in shards) if shards \
+                else leaf.nbytes
+        return int(total)
+
 
 class RecurrentSlotCache(SlotCache):
     """Slot cache for the *recurrent* contract: each slot holds a fixed-size
@@ -133,11 +175,15 @@ class RecurrentSlotCache(SlotCache):
     bench row gates (benchmarks/bench_serve.py).
     """
 
-    def __init__(self, template_fn, n_slots: int):
-        super().__init__(template_fn, n_slots)
+    def __init__(self, template_fn, n_slots: int, *, sharding=None,
+                 name: str = "slot-cache"):
+        super().__init__(template_fn, n_slots, sharding=sharding, name=name)
         # batch-1 empty-history state, reused by every reset_slot scatter
-        self._blank = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
-                                   template_fn(1))
+        # (placed like a prefill output, so the reset stays shard-local)
+        blank = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             template_fn(1))
+        self._blank = blank if self._local_shardings is None else \
+            jax.device_put(blank, self._local_shardings)
 
     def reset_slot(self, slot: int):
         """Retire/cancel: return ``slot``'s lane to the empty-history

@@ -109,10 +109,18 @@ class ServeEngine:
     buckets       : prompt-length buckets (default: powers of two).
     mem_len       : enc-dec only — fixed encoder-memory length every
                     request's ``frames`` must match (cross K/V is unmasked).
+    sharding      : optional ``serve.sharding.ServeSharding`` — run the
+                    shared decode step under pjit with params placed by
+                    ``distrib.sharding.param_specs`` and every slot-cache
+                    leaf model-sharded per ``slot_specs`` (the slot axis is
+                    the data axis). Admit/retire/cancel semantics are
+                    unchanged; prefill outputs are pinned to the batch-1
+                    local specs so the slot write is a sharded scatter.
     """
 
     def __init__(self, model, params, *, n_slots: int, max_len: int,
-                 buckets=None, mem_len: Optional[int] = None):
+                 buckets=None, mem_len: Optional[int] = None,
+                 sharding=None):
         cfg = model.cfg
         if model.prefill is None or model.decode_step is None:
             raise ValueError(errors.msg("no_serving_path", name=cfg.name,
@@ -121,6 +129,12 @@ class ServeEngine:
         # jitted prefill need device arrays
         self.model, self.cfg = model, cfg
         self.params = jax.tree.map(jnp.asarray, params)
+        self.sharding = sharding
+        if sharding is not None:
+            from repro.distrib.sharding import param_specs, shardings_of
+            self.params = jax.device_put(
+                self.params, shardings_of(
+                    param_specs(self.params, sharding.mesh), sharding.mesh))
         self.n_slots, self.max_len = n_slots, max_len
         self.mem_len = mem_len
         self.contract = cache_contract(cfg)
@@ -133,13 +147,24 @@ class ServeEngine:
         self.tokens = np.zeros((n_slots,), np.int32)   # next decode inputs
         cache_cls = RecurrentSlotCache if self.contract == "recurrent" \
             else SlotCache
-        self.slotcache = cache_cls(self._cache_template, n_slots)
-        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,))
+        self.slotcache = cache_cls(self._cache_template, n_slots,
+                                   sharding=sharding, name=cfg.name)
+        # sharded: pin out_shardings so the decode/prefill caches keep the
+        # slot-cache layout (tokens replicated — every host reads them)
+        if sharding is None:
+            tok_out = glob_out = local_out = None
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec
+            tok_out = NamedSharding(sharding.mesh, PartitionSpec())
+            glob_out = (tok_out, self.slotcache._shardings)
+            local_out = (tok_out, self.slotcache._local_shardings)
+        self._decode = jax.jit(self._decode_impl, donate_argnums=(2,),
+                               out_shardings=glob_out)
         # batch-1 decode over a *local* (pre-scatter) cache: the prefix-hit
         # suffix path. NOT donated — the input may be a shared PrefixCache
         # entry whose buffers must survive the call.
-        self._decode1 = jax.jit(self._decode_impl)
-        self._prefill = jax.jit(self._prefill_impl)
+        self._decode1 = jax.jit(self._decode_impl, out_shardings=local_out)
+        self._prefill = jax.jit(self._prefill_impl, out_shardings=local_out)
         self.stats = collections.Counter()
         self._t0 = None
 
@@ -440,6 +465,13 @@ class ServeEngine:
     @property
     def cache_bytes(self) -> int:
         return self.slotcache.bytes
+
+    @property
+    def device_cache_bytes(self) -> int:
+        """Largest per-device slot-cache footprint (== ``cache_bytes``
+        unsharded; ~1/model-axis of it under a ``sharding`` — the number
+        benchmarks/bench_serve_sharded.py gates)."""
+        return self.slotcache.device_bytes
 
 
 # ---------------------------------------------------------------------------

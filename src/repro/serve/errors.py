@@ -38,6 +38,12 @@ ERRORS = {
     "static_trace_ineligible":
         "static ragged baseline needs a pure global-attention stack "
         "(batched ragged prefill)",
+    # mesh-sharded serving: every payload leaf of the slot cache must
+    # split evenly over the model axis (never padded — docs/serving.md
+    # "Mesh-sharded serving")
+    "shard_ineligible":
+        "{name}: slot-cache leaf {leaf!r} has no model-axis dim divisible "
+        "by the {m}-way model axis; serve unsharded or re-mesh",
     # fleet routing
     "router_needs_engines":
         "ReplicaRouter needs at least one engine",

@@ -24,7 +24,11 @@ The scheduling core is synchronous and engine-agnostic: it only uses the
 engine's slot surface (``free_slots`` / ``admit`` / ``decode_step`` /
 ``retire`` / ``cancel`` / ``slots``), which is what lets the property suite
 drive the exact production code paths against a pure-Python fake engine and
-a slot-state oracle. ``AsyncServeFrontend`` is the thin asyncio skin: one
+a slot-state oracle — and why a mesh-sharded ``ServeEngine``
+(``sharding=ServeSharding(...)``, serve/sharding.py) serves through this
+front-end unchanged: the slot surface is placement-blind, so admission,
+deadlines and cancellation compose with a model-split cache for free (the
+sharded fakes in tests/test_serve_properties.py pin exactly this). ``AsyncServeFrontend`` is the thin asyncio skin: one
 driver task steps the shared engine, any number of per-request streams
 multiplex over it.
 

@@ -165,6 +165,25 @@ def test_zoo_serving_flags_documented():
         assert needle in serving, needle
 
 
+def test_sharded_serving_flags_documented():
+    """The mesh-sharded serving flags must exist in the CLI and be
+    documented in cli.md, and serving.md must carry the Mesh-sharded
+    serving section with the leaf placement table, the scatter-admit
+    soundness argument, and the footprint math the gates rely on
+    (belt-and-braces on top of the generic two-direction coverage)."""
+    assert {"--mesh-shape", "--serve-sharded"} <= _serve_flags()
+    cli = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
+    for f in ("--mesh-shape", "--serve-sharded"):
+        assert f"`{f}`" in cli, f
+    serving = open(os.path.join(ROOT, "docs", "serving.md"),
+                   encoding="utf-8").read()
+    assert "## Mesh-sharded serving" in serving
+    for needle in ("slot_specs", "shard_ineligible", "scatter",
+                   "device_bytes_estimate", "replicated", "eff_qk",
+                   "bench_serve_sharded.py", "all-or-nothing"):
+        assert needle in serving, needle
+
+
 def test_readme_documents_subprocess_marker():
     """README must explain deselecting the environment-sensitive
     subprocess tests (`-m "not subprocess"`)."""

@@ -21,6 +21,17 @@ Invariants checked on every sequence:
     queue is empty;
   * the front-end's admission order and per-request outcomes match the
     oracle exactly (FIFO and shortest-prompt-first policies both).
+
+The mesh-sharded fakes (``ShardedFakeEngine`` / ``ShardedRecurrentFake-
+Engine``) additionally model the slot cache as explicit *per-device*
+shards over a dict mesh (the deviceless ``{"data": d, "model": m}``
+idiom of ``repro.serve.sharding.slot_specs``), and after EVERY action
+compare the whole device dict against the oracle's own projection:
+per-device leaf shapes never drift, a slot's cells appear only on the
+shards that own it (no cross-shard contamination — cell values are
+injective in (rid, position, model-shard)), retire/cancel resets are
+shard-local, replicated ``pos`` bookkeeping agrees on every device, and
+free-slot capacity matches the oracle.
 """
 from __future__ import annotations
 
@@ -168,6 +179,168 @@ class RecurrentFakeEngine(FakeEngine):
 FAKES = {"kv": FakeEngine, "recurrent": RecurrentFakeEngine}
 
 
+# ---------------------------------------------------------------------------
+# mesh-sharded fakes: the slot cache as explicit per-device shards
+# ---------------------------------------------------------------------------
+
+FAKE_LEN = 16                      # preallocated fake kv length axis
+SHARD_MESHES = ({"data": 2, "model": 2}, {"data": 1, "model": 3})
+
+
+def shard_cell(rid: int, pos: int, mi: int) -> int:
+    """The cell value request ``rid`` writes at kv position ``pos`` on
+    model shard ``mi``. Injective in (rid, pos, mi): cross-slot AND
+    cross-shard contamination both change it."""
+    return (rid + 1) * 1000 + pos * 10 + (mi + 1)
+
+
+class _ShardedFakeBase(FakeEngine):
+    """``FakeEngine`` whose slot cache lives as explicit per-device shards
+    over a dict mesh (same deviceless idiom as the ``slot_specs``
+    doctests in ``repro.serve.sharding``). The slot axis splits over
+    ``data`` only when divisible — otherwise every data shard replicates
+    all slots, the production batch-1 rule — the payload splits over
+    ``model`` (each model shard stores ``mi``-tagged cells), and the
+    ``pos`` bookkeeping leaf is replicated on every device, mirroring
+    ``REPLICATED_SLOT_LEAVES``. Writes and resets touch only the shards
+    that own the slot; ``check_devices`` compares the whole device dict
+    against the oracle's independent projection after every action."""
+
+    def __init__(self, n_slots: int, mesh=None):
+        super().__init__(n_slots)
+        self.mesh = dict(mesh or SHARD_MESHES[0])
+        d, m = self.mesh["data"], self.mesh["model"]
+        self.spp = n_slots // d if n_slots % d == 0 else n_slots
+        self.dev = {(di, mi): {"rows": [self._blank()
+                                        for _ in range(self.spp)],
+                               "pos": [0] * n_slots}
+                    for di in range(d) for mi in range(m)}
+        self._shapes = self._shape_map()
+
+    def _shape_map(self):
+        return {k: ([len(r) for r in v["rows"]], len(v["pos"]))
+                for k, v in self.dev.items()}
+
+    def _owner_devs(self, slot):
+        """Yield ``((di, mi), local_row, mi)`` for every shard owning
+        ``slot`` — one data shard when the slot axis divides, all of
+        them when it is replicated."""
+        d, m = self.mesh["data"], self.mesh["model"]
+        if self.spp * d == len(self.slots):
+            for mi in range(m):
+                yield (slot // self.spp, mi), slot % self.spp, mi
+        else:
+            for di in range(d):
+                for mi in range(m):
+                    yield (di, mi), slot, mi
+
+    def _pos(self, slot):
+        return next(iter(self.dev.values()))["pos"][slot]
+
+    def _set_pos(self, slot, p):
+        for v in self.dev.values():         # replicated: every device
+            v["pos"][slot] = p
+
+    def _reset(self, slot):
+        for key, row, _mi in self._owner_devs(slot):
+            self.dev[key]["rows"][row] = self._blank()
+        self._set_pos(slot, 0)
+
+    def retire(self, slot):
+        comp = super().retire(slot)
+        self._reset(slot)
+        return comp
+
+    def cancel(self, slot):
+        partial = super().cancel(slot)
+        self._reset(slot)
+        return partial
+
+    def check_devices(self, oracle, n_slots):
+        assert self._shape_map() == self._shapes, \
+            "per-device shard shape drifted"
+        expect = oracle.expected_device_state(n_slots, self.mesh,
+                                              self.contract)
+        assert self.dev == expect, \
+            f"device shards diverged from oracle:\n{self.dev}\nvs\n{expect}"
+        assert len(self.free_slots()) == len(oracle.free), \
+            "free-slot capacity diverged from oracle"
+
+
+class ShardedFakeEngine(_ShardedFakeBase):
+    """kv contract: each shard row is a preallocated ``FAKE_LEN`` vector;
+    admit scatters the prompt's cells, each decode writes exactly one new
+    cell at the replicated ``pos`` cursor, retire/cancel zero the row on
+    the owning shards only."""
+
+    @staticmethod
+    def _blank():
+        return [0] * FAKE_LEN
+
+    def admit(self, req, slot, prefix_cache=None):
+        super().admit(req, slot, prefix_cache=prefix_cache)
+        plen = len(req.tokens)
+        for key, row, mi in self._owner_devs(slot):
+            r = self.dev[key]["rows"][row]
+            assert r == self._blank(), \
+                f"admit into slot {slot} over stale kv shard"
+            for p in range(plen):
+                r[p] = shard_cell(req.rid, p, mi)
+        self._set_pos(slot, plen)
+
+    def decode_step(self):
+        stepped = [(i, s.rid) for i, s in enumerate(self.slots)
+                   if not s.free and s.remaining > 0]
+        retired = super().decode_step()
+        for slot, rid in stepped:           # one shared sharded scatter
+            p = self._pos(slot)
+            for key, row, mi in self._owner_devs(slot):
+                r = self.dev[key]["rows"][row]
+                assert r[p] == 0, f"kv cell {p} of slot {slot} overwritten"
+                r[p] = shard_cell(rid, p, mi)
+            self._set_pos(slot, p + 1)
+        return retired
+
+
+class ShardedRecurrentFakeEngine(_ShardedFakeBase):
+    """Recurrent contract over the same mesh: fixed-width state vector
+    per slot, written wholesale at admit, advanced by one shared step per
+    decode, zeroed shard-locally at retire/cancel. Each model shard's
+    vector carries its ``mi + 1`` tag so a write landing on the wrong
+    shard is a value difference, not just a shape one."""
+
+    contract = "recurrent"
+
+    @staticmethod
+    def _blank():
+        return [0] * FAKE_STATE_SIZE
+
+    def admit(self, req, slot, prefix_cache=None):
+        super().admit(req, slot, prefix_cache=prefix_cache)
+        plen = len(req.tokens)
+        for key, row, mi in self._owner_devs(slot):
+            r = self.dev[key]["rows"][row]
+            assert r == self._blank(), \
+                f"admit into slot {slot} over stale recurrent shard"
+            self.dev[key]["rows"][row] = [req.rid + 1, plen + 1, mi + 1] \
+                + [0] * (FAKE_STATE_SIZE - 3)
+        self._set_pos(slot, plen)
+
+    def decode_step(self):
+        stepped = [i for i, s in enumerate(self.slots)
+                   if not s.free and s.remaining > 0]
+        retired = super().decode_step()
+        for slot in stepped:                # the one shared recurrent step
+            for key, row, _mi in self._owner_devs(slot):
+                self.dev[key]["rows"][row][1] += 1
+            self._set_pos(slot, self._pos(slot) + 1)
+        return retired
+
+
+SHARDED_FAKES = {"kv": ShardedFakeEngine,
+                 "recurrent": ShardedRecurrentFakeEngine}
+
+
 class ManualClock:
     def __init__(self):
         self.t = 0.0
@@ -278,6 +451,45 @@ class Oracle:
                 + [0] * (FAKE_STATE_SIZE - 2)
         return state
 
+    def expected_device_state(self, n_slots, mesh, kind):
+        """Mesh-sharded projection of the oracle's dicts: the exact
+        per-device shard dict a sharded fake must hold *right now*.
+        Re-derives the ownership rule independently (slot axis over
+        ``data`` only when divisible, else replicated; payload over
+        ``model``; ``pos`` replicated everywhere): free slots are zeros
+        on every shard, an occupied slot's cells exist only on its
+        owners, kv rows carry ``shard_cell(rid, p, mi)`` for the
+        ``plen + ntok - 1`` filled positions, recurrent rows carry
+        ``[rid + 1, plen + ntok, mi + 1, 0...]``."""
+        d, m = mesh["data"], mesh["model"]
+        spp = n_slots // d if n_slots % d == 0 else n_slots
+        width = FAKE_LEN if kind == "kv" else FAKE_STATE_SIZE
+        occ = {r["slot"]: (rid, self.reqs[rid][1], r["ntok"])
+               for rid, r in self.running.items()}
+        pos = [occ[s][1] + occ[s][2] - 1 if s in occ else 0
+               for s in range(n_slots)]
+        dev = {}
+        for di in range(d):
+            slots = (range(di * spp, (di + 1) * spp)
+                     if spp * d == n_slots else range(n_slots))
+            for mi in range(m):
+                rows = []
+                for s in slots:
+                    if s not in occ:
+                        rows.append([0] * width)
+                    elif kind == "kv":
+                        rid, plen, ntok = occ[s]
+                        filled = plen + ntok - 1
+                        rows.append([shard_cell(rid, p, mi)
+                                     if p < filled else 0
+                                     for p in range(width)])
+                    else:
+                        rid, plen, ntok = occ[s]
+                        rows.append([rid + 1, plen + ntok, mi + 1]
+                                    + [0] * (width - 3))
+                dev[(di, mi)] = {"rows": rows, "pos": list(pos)}
+        return dev
+
 
 # ---------------------------------------------------------------------------
 # random-sequence driver
@@ -340,19 +552,26 @@ def _run_sequence(seed, n_slots, depth, policy, n_actions=18,
                 fe.cancel(victim)
                 oracle.cancel(victim)
         assert len(fe._by_slot) <= n_slots
-        if eng.contract == "recurrent":
+        if eng.contract == "recurrent" and hasattr(eng, "state"):
             # the recurrent-state contract, checked after EVERY action:
             # constant size, reset on retire/cancel/expiry, no cross-slot
             # contamination (the oracle projects the expected vectors)
             assert eng.state == oracle.expected_state(n_slots)
+        if hasattr(eng, "check_devices"):
+            # the sharded contract, checked after EVERY action: shard
+            # shapes invariant, cells only on owning shards, replicated
+            # pos in agreement, capacity parity with the oracle
+            eng.check_devices(oracle, n_slots)
 
     # drain: no deadline outlives a big jump, so every survivor terminates
     clk.advance(1e6)
     for _ in range(64):
         busy = fe.step()
         oracle.step(clk.t)
-        if eng.contract == "recurrent":
+        if eng.contract == "recurrent" and hasattr(eng, "state"):
             assert eng.state == oracle.expected_state(n_slots)
+        if hasattr(eng, "check_devices"):
+            eng.check_devices(oracle, n_slots)
         if not busy:
             break
     else:                                   # pragma: no cover - deadlock
@@ -409,6 +628,64 @@ def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy, fake):
     checks its state vectors against the oracle after every action)."""
     _check_invariants(*_run_sequence(seed, n_slots, depth, policy,
                                      engine_cls=FAKES[fake]))
+
+
+@settings(max_examples=60)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       n_slots=st.integers(min_value=1, max_value=3),
+       depth=st.integers(min_value=0, max_value=4),
+       policy=st.sampled_from(("fifo", "spf")),
+       fake=st.sampled_from(("kv", "recurrent")),
+       mesh_i=st.sampled_from((0, 1)))
+def test_sharded_slot_cache_matches_device_oracle(seed, n_slots, depth,
+                                                  policy, fake, mesh_i):
+    """>= 60 random action sequences against the mesh-sharded fakes: the
+    full per-device shard dict equals the oracle's projection after every
+    single action (shard-shape invariance, owner-only writes, shard-local
+    resets, replicated pos parity, capacity parity), under both slot-
+    cache contracts and both a (2 data x 2 model) and a model-only mesh.
+    n_slots in 1..3 over data=2 covers the divisible-slot-axis split AND
+    the replicated batch-1 rule."""
+    mesh = SHARD_MESHES[mesh_i]
+    _check_invariants(*_run_sequence(
+        seed, n_slots, depth, policy,
+        engine_cls=lambda n: SHARDED_FAKES[fake](n, mesh=mesh)))
+
+
+def test_sharded_fake_owner_only_writes_and_local_reset():
+    """Unit pin of the sharded-fake mechanics the property relies on:
+    admitting into slot 1 of a 2-slot cache on a (2, 2) mesh touches ONLY
+    data shard 1's rows, the two model shards hold distinct mi-tagged
+    cells for the same position, pos is replicated on all four devices,
+    and retire zeros the owning shards without disturbing the others."""
+    eng = ShardedFakeEngine(2, mesh={"data": 2, "model": 2})
+    req = Request(rid=7, tokens=np.arange(3, dtype=np.int32), gen=2)
+    eng.admit(req, 1)
+    for mi in range(2):
+        assert eng.dev[(0, mi)]["rows"] == [[0] * FAKE_LEN]   # untouched
+        row = eng.dev[(1, mi)]["rows"][0]
+        assert row[:3] == [shard_cell(7, p, mi) for p in range(3)]
+        assert row[3:] == [0] * (FAKE_LEN - 3)
+    assert eng.dev[(0, 0)]["rows"][0] != eng.dev[(1, 0)]["rows"][0]
+    assert eng.dev[(1, 0)]["rows"][0] != eng.dev[(1, 1)]["rows"][0]
+    assert all(v["pos"] == [0, 3] for v in eng.dev.values())
+    eng.decode_step()                       # one more cell at pos 3
+    assert all(v["pos"] == [0, 4] for v in eng.dev.values())
+    assert eng.dev[(1, 1)]["rows"][0][3] == shard_cell(7, 3, 1)
+    eng.retire(1)                           # shard-local zero-reset
+    blank = [0] * FAKE_LEN
+    assert all(v["rows"] == [blank] and v["pos"] == [0, 0]
+               for v in eng.dev.values())
+    # non-divisible slot count: every data shard replicates all slots
+    rep = ShardedRecurrentFakeEngine(3, mesh={"data": 2, "model": 2})
+    assert all(len(v["rows"]) == 3 for v in rep.dev.values())
+    rep.admit(Request(rid=0, tokens=np.arange(2, dtype=np.int32), gen=3), 2)
+    for di in range(2):                     # replicated: both data shards
+        for mi in range(2):
+            assert rep.dev[(di, mi)]["rows"][2][:3] == [1, 3, mi + 1]
+    rep.cancel(2)
+    assert all(r == [0] * FAKE_STATE_SIZE
+               for v in rep.dev.values() for r in v["rows"])
 
 
 @settings(max_examples=60)

@@ -24,7 +24,8 @@ import pytest
 from helpers import greedy_chain_ok, tiny_cfg
 from repro.configs import ARCH_IDS, DEIT_IDS
 from repro.serve import (PrefixCache, RecurrentSlotCache, ReplicaRouter,
-                         ServeEngine, ServeFrontend, Status, cache_contract)
+                         ServeEngine, ServeFrontend, Status, cache_contract,
+                         slot_specs)
 from repro.serve import errors
 from repro.models import build_model
 from repro.serve.engine import Request
@@ -38,6 +39,28 @@ MEM_LEN = 8        # enc-dec encoder-memory length used throughout
 PREFIX_GAPS = {
     "gemma3-1b": "prefix_ineligible",
 }
+
+# configs that cannot model-shard their slot cache on a 2-way model axis:
+# the reduced GQA stacks collapse to a single kv head (and jamba's hybrid
+# attn rows with them), so leaf 'k' has no dim divisible by the axis —
+# sharding is all-or-nothing, never padded (docs/serving.md "Mesh-sharded
+# serving"). The xfail reason is the engine's own refusal, formatted from
+# the shared error table, so the refusal text and this matrix cannot
+# drift apart.
+SHARD_MESH_M = 2
+SHARD_GAPS = frozenset({"granite-8b", "gemma3-1b", "qwen2-1.5b",
+                        "internvl2-26b", "qwen3-moe-235b-a22b",
+                        "jamba-1.5-large-398b"})
+
+
+def _shard_params():
+    return [pytest.param(a, marks=pytest.mark.xfail(
+                reason=errors.msg("shard_ineligible",
+                                  name=tiny_cfg(a).name, leaf="k",
+                                  m=SHARD_MESH_M), strict=True))
+            if a in SHARD_GAPS else
+            pytest.param(a, marks=pytest.mark.subprocess)
+            for a in ARCH_IDS]
 
 
 def _gap_reason(arch: str, key: str) -> str:
@@ -173,6 +196,58 @@ def test_zoo_routed_admit_two_decodes(zoo, arch):
         assert all(0 <= t < model.cfg.vocab_size for t in comp.tokens)
     assert router.active_count() == 0
     assert all(s.free for e in engines for s in e.slots)
+
+
+@pytest.mark.parametrize("arch", _shard_params())
+def test_zoo_sharded_admit_two_decodes(zoo, arch):
+    """The mesh-sharded serving floor over the whole zoo: every LM config
+    either takes one sharded admit + two decode steps on a live 2-device
+    (1 data x 2 model) mesh, or refuses up front with the single-sourced
+    ``shard_ineligible`` message (strict-xfail rows). The deviceless
+    ``slot_specs`` call decides both: it raises for every SHARD_GAPS row,
+    and for eligible rows the live run happens in a fresh subprocess (the
+    forced device count must precede jax init — ``subprocess`` marker)."""
+    model, params = zoo(arch)
+    sc = _engine(model, params).slotcache
+    slot_specs(sc._template, sc.batch_axes, {"model": SHARD_MESH_M},
+               name=model.cfg.name)       # <- the eligibility decision
+    from test_serve_sharded import run_py
+    out = run_py(f"""
+import jax, numpy as np
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+from repro.serve import ServeEngine, ServeSharding
+from repro.serve.engine import Request
+from helpers import tiny_cfg
+
+assert len(jax.devices()) == 2
+cfg = tiny_cfg({arch!r})
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+kw = dict(n_slots=1, max_len=32)
+rkw = {{}}
+if cfg.family == "encdec":
+    kw["mem_len"] = 8
+    rkw["frames"] = np.zeros((8, cfg.d_model), np.float32)
+eng = ServeEngine(model, params,
+                  sharding=ServeSharding(make_mesh((1, 2))), **kw)
+eng.begin()
+eng.admit(Request(rid=0, tokens=(np.arange(6) % 7 + 1).astype(np.int32),
+                  gen=3, **rkw), slot=0)
+assert len(eng.slots[0].out) == 1
+eng.decode_step()
+retired = eng.decode_step()
+assert len(eng.slots[0].out) == 3 and retired == [0]
+comp = eng.retire(0)
+assert comp.tokens.shape == (3,)
+assert all(0 <= t < cfg.vocab_size for t in comp.tokens)
+assert eng.slots[0].free
+# the decode really ran over a model-split cache, not a replicated one
+assert any("model" in tuple(s) for s in jax.tree_util.tree_leaves(
+    eng.slotcache.specs, is_leaf=lambda s: isinstance(s, tuple)))
+print("OK")
+""", devices=2)
+    assert "OK" in out
 
 
 @pytest.mark.parametrize("arch", _gap_params("affinity_ineligible"))
