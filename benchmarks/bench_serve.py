@@ -63,6 +63,24 @@ Config-zoo gates (ISSUE 8):
             forward at the smaller expert count, with the compensated
             fold inside parity tolerance of naive expert dropping.
 
+Scheduler gates (ISSUE 10):
+
+  chunked interference — a 64-token prompt arriving (x3) while two slots
+            decode steadily must not freeze them: with chunked prefill
+            the co-resident decode-gap p99 must be STRICTLY below the
+            unchunked engine's, with identical token streams. Fixed-cost
+            fake engine (1 ms/decode step, 1 ms/prompt token), so the
+            gate measures the scheduler's interleaving, not device speed.
+
+  chunked == atomic — greedy streams with ``prefill_chunk`` set must be
+            byte-identical to the atomic engine's across the kv,
+            recurrent and MoE slot-cache contracts (real engines).
+
+  enc-dec mixed load — an encoder-burst + steady-decode trace served
+            through the chunked scheduler gets its own p50/p99 row,
+            byte-identical to the atomic engine; printed and written to
+            scheduler_trace.md together with the interference table.
+
 Sharded gate (ISSUE 9):
 
   671B-class footprint — the FULL jamba-1.5-large-398b / deepseek-v3-671b
@@ -74,7 +92,9 @@ Sharded gate (ISSUE 9):
             scaling table) is benchmarks/bench_serve_sharded.py.
 
 Run:  JAX_PLATFORMS=cpu PYTHONPATH=src python benchmarks/bench_serve.py
-      (--table-out routed_trace.md writes the routed-trace p50/p99 table)
+      (--table-out routed_trace.md writes the routed-trace p50/p99 table;
+       --sched-table-out scheduler_trace.md writes the chunked-prefill
+       interference + mixed-load tables)
 """
 from __future__ import annotations
 
@@ -404,6 +424,155 @@ def gate_expert_pruned_serving():
           f"{len(comps)} pruned streams match the full forward")
 
 
+class _CostedFakeEngine(FleetFakeEngine):
+    """FleetFakeEngine whose admits cost ``tok_time`` wall seconds per
+    prompt token consumed (atomic admits pay the whole prompt in one call,
+    chunked admits pay per chunk), so the decode gap a co-resident stream
+    sees IS the scheduler's interleaving policy, not device speed."""
+
+    def __init__(self, n_slots, *, step_time=0.0, tok_time=0.0):
+        super().__init__(n_slots, step_time=step_time)
+        self.tok_time = tok_time
+
+    def continue_admit(self, slot, budget=None):
+        s = self.slots[slot]
+        if s.pending is not None and self.tok_time:
+            take = s.pending if budget is None \
+                else min(max(1, int(budget)), s.pending)
+            time.sleep(take * self.tok_time)       # releases the GIL
+        return super().continue_admit(slot, budget)
+
+
+def _interference_run(chunk, *, arrivals=3, plen=64, tok_time=1e-3):
+    """Two steady decoders + ``arrivals`` sequential max-length prompts
+    through one fixed-cost engine; returns (per-iteration decode gaps,
+    long-prompt token streams)."""
+    import numpy as np
+    eng = _CostedFakeEngine(3, step_time=1e-3, tok_time=tok_time)
+    fe = ServeFrontend(eng, queue_depth=8, prefill_chunk=chunk)
+    steadies = [fe.submit(Request(rid=i, tokens=np.arange(2, dtype=np.int32),
+                                  gen=10_000)) for i in range(2)]
+    for _ in range(2):
+        fe.step()                                  # both steadies decoding
+    gaps, longs = [], []
+    while len(longs) < arrivals or not all(h.finished for h in longs):
+        # the gap window spans submit + step: atomic admits prefill inside
+        # submit (free slot), chunked admits prefill inside step — the
+        # co-resident stream stalls for the duration either way
+        t0 = time.perf_counter()
+        if len(longs) < arrivals and (not longs or longs[-1].finished):
+            longs.append(fe.submit(Request(
+                rid=100 + len(longs),
+                tokens=np.zeros(plen, np.int32), gen=4)))
+        fe.step()
+        gaps.append(time.perf_counter() - t0)
+        assert len(gaps) < 500, "interference scenario did not converge"
+    for h in steadies:
+        fe.cancel(h.rid)
+    assert all(h.status is Status.DONE and len(h.tokens) == 4
+               for h in longs)
+    return gaps, [h.tokens for h in longs]
+
+
+def gate_chunked_interference(chunk=8):
+    """Chunked prefill must strictly beat the atomic engine on co-resident
+    decode-gap p99 when max-length prompts arrive mid-decode, with the
+    long prompts' token streams unchanged. Returns the markdown table."""
+    import numpy as np
+    rows, streams, p99 = [], {}, {}
+    for label, c in (("unchunked", None), (f"chunked-{chunk}", chunk)):
+        gaps, toks = _interference_run(c)
+        streams[label], p99[label] = toks, float(np.percentile(gaps, 99))
+        rows.append({"mode": label, "iters": len(gaps),
+                     "gap_p50_ms": float(np.percentile(gaps, 50)) * 1e3,
+                     "gap_p99_ms": p99[label] * 1e3})
+    table = format_table(rows)
+    print(table)
+    a, b = streams["unchunked"], streams[f"chunked-{chunk}"]
+    assert a == b, "chunking changed the long prompts' token streams"
+    assert p99[f"chunked-{chunk}"] < p99["unchunked"], (
+        f"chunked decode-gap p99 not strictly better: "
+        f"{p99[f'chunked-{chunk}'] * 1e3:.1f} vs "
+        f"{p99['unchunked'] * 1e3:.1f} ms")
+    print(f"[bench_serve] GATE chunked interference: decode-gap p99 "
+          f"{p99[f'chunked-{chunk}'] * 1e3:.1f} < "
+          f"{p99['unchunked'] * 1e3:.1f} ms (x3 64-token arrivals, "
+          f"streams identical)")
+    return table
+
+
+def gate_chunked_identity(model, params, trace, comps_engine):
+    """Chunked greedy streams must be byte-identical to the atomic
+    engine's across the kv, recurrent and MoE slot-cache contracts."""
+    import numpy as np
+    checks = [("kv(trained)", model, params, trace, MAX_LEN, 7,
+               comps_engine)]
+    for arch, chunk in (("rwkv6-3b", 3), ("qwen3-moe-235b-a22b", 3)):
+        cfg = _zoo_cfg(arch)
+        m = build_model(cfg)
+        p = m.init(jax.random.PRNGKey(0))
+        tr = synthetic_trace(4, cfg.vocab_size, seed=9,
+                             prompt_range=(4, 12), gen_range=(2, 6))
+        checks.append((cfg.name, m, p, tr, 32, chunk, None))
+    for name, m, p, tr, max_len, chunk, ref in checks:
+        if ref is None:
+            ref = ServeEngine(m, p, n_slots=2, max_len=max_len).run(tr)
+        comps = ServeEngine(m, p, n_slots=2, max_len=max_len).run(
+            tr, prefill_chunk=chunk)
+        by_rid = {c.rid: c for c in ref}
+        for c in comps:
+            assert list(np.asarray(c.tokens)) == \
+                list(np.asarray(by_rid[c.rid].tokens)), (
+                    f"{name}: chunked stream diverged on rid {c.rid}")
+        print(f"[bench_serve] GATE chunked == atomic [{name}]: "
+              f"{len(comps)} streams byte-identical at chunk {chunk}")
+
+
+def mixedload_encdec_row(chunk=4):
+    """Enc-dec mixed load through the chunked scheduler: an encoder burst
+    (frames + long prompts, short gens) lands on top of steady decoders
+    (short prompts, long gens). Returns the p50/p99 markdown row; streams
+    must match the atomic engine's."""
+    import numpy as np
+    cfg = _zoo_cfg("seamless-m4t-large-v2")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mem = 10
+    rng = np.random.RandomState(11)
+
+    def req(rid, p, g):
+        return Request(rid=rid, tokens=rng.randint(
+            0, cfg.vocab_size, size=p).astype(np.int32), gen=g,
+            frames=rng.randn(mem, cfg.d_model).astype(np.float32))
+
+    steady = [req(i, 3, 10) for i in range(2)]            # decode-bound
+    burst = [req(10 + i, 12, 2) for i in range(4)]        # encoder-bound
+    trace = steady + burst
+    eng = ServeEngine(model, params, n_slots=2, max_len=32, mem_len=mem)
+    eng.run([req(90, 12, 2), req(91, 3, 3)],
+            prefill_chunk=chunk)                          # compile-warm
+    ref = {c.rid: c for c in
+           ServeEngine(model, params, n_slots=2, max_len=32,
+                       mem_len=mem).run(trace)}
+    t0 = time.perf_counter()
+    handles = ServeFrontend(eng, queue_depth=len(trace),
+                            prefill_chunk=chunk).run(trace)
+    wall = time.perf_counter() - t0
+    for h in handles:
+        assert h.status is Status.DONE, f"rid {h.rid} ended {h.status}"
+        assert h.tokens == list(np.asarray(ref[h.rid].tokens)), (
+            f"enc-dec chunked stream diverged on rid {h.rid}")
+    tab = frontend_table(handles, wall)
+    tab["mode"] = f"encdec-mixed (chunk {chunk})"
+    table = format_table([tab], ["mode", "requests", "done", "tokens",
+                                 "lat_p50_ms", "lat_p99_ms",
+                                 "ttft_p50_ms", "ttft_p99_ms"])
+    print(table)
+    print(f"[bench_serve] GATE enc-dec mixed load: {len(handles)} chunked "
+          f"streams byte-identical to the atomic engine")
+    return table
+
+
 def gate_sharded_footprint():
     """Mesh-sharded serving at 671B scale, analytically (ISSUE 9): the
     per-device slot-cache bytes of the FULL ``jamba-1.5-large-398b`` and
@@ -473,6 +642,10 @@ def main():
     ap.add_argument("--table-out", default=None,
                     help="write the routed-trace p50/p99 markdown table "
                          "here (CI uploads it as an artifact)")
+    ap.add_argument("--sched-table-out", default=None,
+                    help="write the chunked-prefill interference table "
+                         "and the enc-dec mixed-load row here (CI "
+                         "uploads it as an artifact)")
     args = ap.parse_args()
 
     cfg, model, params = trained_lm()
@@ -517,6 +690,24 @@ def main():
     gate_fleet_throughput(table_out=args.table_out)
     gate_fleet_parity(model, params, trace, comps_c)
     gate_drain()
+
+    # scheduler gates (ISSUE 10)
+    interference = gate_chunked_interference()
+    gate_chunked_identity(model, params, trace, comps_c)
+    mixed = mixedload_encdec_row()
+    if args.sched_table_out:
+        with open(args.sched_table_out, "w") as f:
+            f.write(
+                "# Scheduler interference: chunked vs unchunked prefill\n\n"
+                "A 64-token prompt arrives (x3) while two slots decode\n"
+                "steadily; fixed-cost fake engine (1 ms/decode step,\n"
+                "1 ms/prompt token), so the decode gap measures the\n"
+                "scheduler's interleaving, not device speed.\n\n"
+                + interference + "\n\n"
+                "# Mixed load: enc-dec encoder burst + steady decode\n\n"
+                + mixed + "\n")
+        print(f"[bench_serve] scheduler-trace tables -> "
+              f"{args.sched_table_out}")
 
     # config-zoo gates (ISSUE 8)
     gate_recurrent_state_bytes()

@@ -87,7 +87,7 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                 rate=None, seed=0, compare_static=False, queue_depth=16,
                 deadline_ms=None, deadline_frac=1.0, prefix_cache=0,
                 prefix_len=0, spf=False, replicas=1, route="least-loaded",
-                mem_len=None, sharding=None, log=print):
+                mem_len=None, sharding=None, prefill_chunk=None, log=print):
     """Async front-end + continuous-batching engine over a synthetic trace.
 
     The trace drives the full serving stack: Poisson arrivals (``rate``),
@@ -109,6 +109,11 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
     under pjit with the slot cache model-sharded; the report additionally
     logs the per-device cache footprint (docs/serving.md "Mesh-sharded
     serving").
+
+    With ``prefill_chunk`` set, cold admits prefill at most that many
+    prompt tokens per engine iteration (docs/serving.md "Scheduler"):
+    occupied slots take a decode step between chunks, so long prompts
+    never freeze co-resident streams; token output is byte-identical.
     """
     from repro.serve import (PrefixCache, ReplicaRouter, ServeEngine,
                              ServeFrontend, frontend_table,
@@ -129,7 +134,7 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
                for _ in range(max(1, replicas))]
     for e in engines:
         e.warmup(prompt_lens=[len(r.tokens) for r in trace],
-                 prefix=prefix_cache > 0)
+                 prefix=prefix_cache > 0, prefill_chunk=prefill_chunk)
     if replicas > 1:
         eng = ReplicaRouter(engines, route=route, prefix_cap=prefix_cache)
         pc = None
@@ -137,7 +142,8 @@ def serve_trace(model, params, *, n, slots, max_len, prompt_range, gen_range,
         eng = engines[0]
         pc = PrefixCache(cap=prefix_cache) if prefix_cache > 0 else None
     fe = ServeFrontend(eng, queue_depth=queue_depth,
-                       policy="spf" if spf else "fifo", prefix_cache=pc)
+                       policy="spf" if spf else "fifo", prefix_cache=pc,
+                       prefill_chunk=prefill_chunk)
     t0 = time.perf_counter()
     handles = fe.run(trace, log=log)
     wall = time.perf_counter() - t0
@@ -226,6 +232,10 @@ def main():
                          "trace request (the prefix-cache workload)")
     ap.add_argument("--spf", action="store_true",
                     help="shortest-prompt-first admission instead of FIFO")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max prompt tokens a cold admit prefills per "
+                         "engine iteration (chunked prefill via the "
+                         "scheduler); default: atomic whole-prompt admits")
     ap.add_argument("--replicas", type=int, default=1,
                     help="engine replicas behind the ReplicaRouter; 1 "
                          "serves through a single engine (no router)")
@@ -285,7 +295,8 @@ def main():
                     prefix_cache=args.prefix_cache,
                     prefix_len=args.prefix_len, spf=args.spf,
                     replicas=args.replicas, route=args.route,
-                    mem_len=args.mem_len, sharding=sharding)
+                    mem_len=args.mem_len, sharding=sharding,
+                    prefill_chunk=args.prefill_chunk)
     else:
         serve_loop(model, params, batch=args.batch,
                    prompt_len=args.prompt_len, gen=args.gen,

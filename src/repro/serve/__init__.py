@@ -12,8 +12,9 @@ from repro.serve.errors import ERRORS
 from repro.serve.frontend import (AsyncServeFrontend, Handle, ServeFrontend,
                                   frontend_table)
 from repro.serve.prefix import PrefixCache
-from repro.serve.queue import AdmissionQueue, Overloaded, Status
+from repro.serve.queue import Overloaded, Status
 from repro.serve.router import ReplicaRouter, ReplicaState
+from repro.serve.scheduler import AdmissionQueue, Scheduler
 from repro.serve.sharding import (ServeSharding, device_bytes_estimate,
                                   slot_specs)
 
@@ -22,5 +23,6 @@ __all__ = ["SlotCache", "RecurrentSlotCache", "cache_bytes",
            "ServeEngine", "run_static_trace", "synthetic_trace",
            "percentile_table", "ServeFrontend", "AsyncServeFrontend",
            "Handle", "frontend_table", "PrefixCache", "AdmissionQueue",
-           "Overloaded", "Status", "ReplicaRouter", "ReplicaState",
-           "ServeSharding", "slot_specs", "device_bytes_estimate"]
+           "Scheduler", "Overloaded", "Status", "ReplicaRouter",
+           "ReplicaState", "ServeSharding", "slot_specs",
+           "device_bytes_estimate"]

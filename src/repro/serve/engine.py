@@ -5,6 +5,14 @@ Lifecycle (docs/serving.md):
   submit -> [queue] -> admit (bucketed prefill, write slot) -> decode ...
             -> retire (slot freed) -> refill mid-flight from the queue
 
+Admission is non-atomic under the hood: ``begin_admit`` binds a request to
+a slot (PREFILLING — occupied, but skipping decode lanes) and
+``continue_admit`` consumes prompt tokens up to a budget, installing the
+slot once the prompt is done. ``admit`` is the atomic composition; the
+scheduling layer (serve/scheduler.py) time-slices ``continue_admit`` to
+interleave chunked prefills with decode steps, so a long prompt never
+stalls co-resident streams. Either way the computed tokens are identical.
+
 One shared jitted decode step runs over all ``n_slots`` slots per iteration;
 per-slot ``pos`` valid-lengths inside the cache drive the masked decode
 attention (``kernels/flash_decode/decode_attention`` on TPU), so slots at
@@ -76,6 +84,20 @@ class Completion:
 
 
 @dataclasses.dataclass
+class _Prefill:
+    """In-flight (possibly chunked) admit for one slot: the batch-1 local
+    cache being built and how much of the prompt it has absorbed. Held
+    aside until the whole prompt is consumed, then installed with a single
+    slot scatter — the shared (possibly sharded) cache never sees a
+    half-prefilled slot, so chunk writes stay shard-local for free."""
+    req: Request
+    local: object = None           # batch-1 cache pytree (None pre-chunk-1)
+    consumed: int = 0              # prompt tokens absorbed into ``local``
+    first: Optional[int] = None    # first generated token (set at the end)
+    prefix_cache: object = None    # insert/lookup target (None if unused)
+
+
+@dataclasses.dataclass
 class _Slot:
     rid: int = -1
     remaining: int = 0
@@ -83,6 +105,7 @@ class _Slot:
     req: Optional[Request] = None
     t_admit: float = 0.0
     t_first: float = 0.0
+    pending: Optional[_Prefill] = None   # set while PREFILLING
 
     @property
     def free(self) -> bool:
@@ -208,11 +231,30 @@ class ServeEngine:
         raise ValueError(errors.msg("prompt_exceeds_bucket", n=n,
                                     bucket=self.buckets[-1]))
 
+    def _stat_bucket(self, L: int) -> int:
+        """Aggregation key for the ``prefill_b*`` stats counters: the
+        smallest bucket covering ``L``. Exact-length fallback prefills
+        (one compile per distinct length) used to key stats by the exact
+        length, so a long ragged trace grew ``stats`` without bound;
+        bucketing the *key* keeps the counter family bounded by the bucket
+        table while the compiled shapes stay exact."""
+        for b in self.buckets:
+            if b >= L:
+                return b
+        return self.buckets[-1]
+
     def free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.free]
 
     def active_count(self) -> int:
         return sum(not s.free for s in self.slots)
+
+    def decoding_count(self) -> int:
+        """Occupied slots actually in the decode phase. A PREFILLING slot
+        (non-atomic admit in flight) is occupied but has no token to feed
+        the shared decode step yet — it skips decode lanes until its
+        prompt is consumed."""
+        return sum((not s.free) and s.pending is None for s in self.slots)
 
     def _now(self) -> float:
         return time.perf_counter() - self._t0
@@ -233,107 +275,164 @@ class ServeEngine:
         return (self.ragged_ok and self.cfg.family == "lm") \
             or self.contract == "recurrent"
 
-    def _splice_prefix(self, req: Request, entry_cache, hit_len: int):
-        """Prefix-hit admit path, then run only the un-cached suffix, token
-        by token, through the batch-1 decode step.
+    def begin_admit(self, req: Request, slot: int, prefix_cache=None):
+        """Bind ``req`` to ``slot`` without running any prefill work.
 
-        KV contract: rewind the cached prefill cache to the hit length
-        (exact by causality, see serve/prefix.py). Recurrent contract: the
-        entry is a whole-prefix state snapshot used as-is — ``hit_len ==
-        len(entry.tokens)`` by the whole-entry lookup, so its ``pos``
-        leaves already match and there is nothing to rewind.
-        Returns (first_token, local_cache) like ``_prefill``."""
-        P = len(req.tokens)
-        if self.contract == "recurrent":
-            local = entry_cache
-        else:
-            from repro.models.lm import override_cache_pos
-            local = override_cache_pos(entry_cache,
-                                       jnp.full((1,), hit_len, jnp.int32))
-        nxt = None
-        for t in np.asarray(req.tokens[hit_len:], np.int32):
-            nxt, local = self._decode1(self.params,
-                                       jnp.full((1, 1), t, jnp.int32), local)
-        self.stats["prefix_hits"] += 1
-        self.stats["prefix_reused_tokens"] += hit_len
-        self.stats["prefix_suffix_tokens"] += P - hit_len
-        return int(nxt[0]), local
-
-    def _prefill_recurrent(self, req: Request, prefix_cache=None):
-        """Cold admit under the recurrent contract: exact prefill of the
-        longest chunk-quantized prefix (compile count bounded to one shape
-        per multiple of the smallest bucket — recurrent stacks can't pad),
-        then the remaining tokens one at a time through the shared batch-1
-        decode step. With a ``prefix_cache``, the chunk state is inserted
-        under its exact token prefix: the whole-entry snapshot a later
-        prompt extending it can reuse."""
-        P = len(req.tokens)
-        lo = self.buckets[0]
-        L0 = max(1, lo * ((P - 1) // lo))
-        toks = np.asarray(req.tokens[:L0], np.int32)[None]
-        first, local = self._prefill(self.params,
-                                     {"tokens": jnp.asarray(toks)},
-                                     jnp.asarray([L0], jnp.int32))
-        self.stats[f"prefill_b{L0}"] += 1
-        if prefix_cache is not None and L0 >= prefix_cache.min_hit:
-            from repro.serve.cache import cache_bytes
-            prefix_cache.insert(req.tokens[:L0], local, cache_bytes(local))
-        for t in np.asarray(req.tokens[L0:], np.int32):
-            first, local = self._decode1(self.params,
-                                         jnp.full((1, 1), t, jnp.int32),
-                                         local)
-        return int(first[0]), local
-
-    def admit(self, req: Request, slot: int, prefix_cache=None):
-        """Prefill ``req`` and install it into ``slot``.
-
-        With a ``prefix_cache`` (serve/prefix.py) on a prefix-eligible
-        config, a prompt sharing a cached prefix skips recomputing it; the
-        full prefill result is inserted back into the cache either way.
+        First half of the non-atomic admit the scheduler
+        (serve/scheduler.py) drives: validates the request, consults the
+        prefix cache, and marks the slot PREFILLING — occupied (``free``
+        is False) but skipping decode lanes until ``continue_admit``
+        consumes the whole prompt. On a prefix hit the cached rows are
+        adopted up-front: the KV contract rewinds the entry to the hit
+        length (exact by causality, serve/prefix.py), the recurrent
+        contract reuses the whole-prefix state snapshot as-is.
         """
         P = len(req.tokens)
         if P + req.gen > self.max_len:
             raise ValueError(errors.msg("request_exceeds_max_len",
                                         rid=req.rid, prompt=P, gen=req.gen,
                                         max_len=self.max_len))
+        if self.cfg.family == "encdec":
+            fr = np.asarray(req.frames)
+            if fr.shape[0] != self.mem_len:
+                raise ValueError(errors.msg(
+                    "frames_mem_len_mismatch", rid=req.rid,
+                    frames=fr.shape[0], mem_len=self.mem_len))
         use_prefix = prefix_cache is not None and self.prefix_eligible()
         recurrent = self.contract == "recurrent"
+        st = _Prefill(req=req,
+                      prefix_cache=prefix_cache if use_prefix else None)
         hit = prefix_cache.lookup(req.tokens, whole_entry=recurrent) \
             if use_prefix else None
         if hit is not None:
-            first, local = self._splice_prefix(req, hit[0].cache, hit[1])
-        elif recurrent:
-            first, local = self._prefill_recurrent(
-                req, prefix_cache if use_prefix else None)
-        else:
-            L = self._bucket(P)
-            toks = np.zeros((1, L), np.int32)
-            toks[0, :P] = req.tokens
-            batch = {"tokens": jnp.asarray(toks)}
-            if self.cfg.family == "encdec":
-                fr = np.asarray(req.frames)
-                if fr.shape[0] != self.mem_len:
-                    raise ValueError(errors.msg(
-                        "frames_mem_len_mismatch", rid=req.rid,
-                        frames=fr.shape[0], mem_len=self.mem_len))
-                batch["frames"] = jnp.asarray(fr)[None]
-            first, local = self._prefill(self.params, batch,
-                                         jnp.asarray([P], jnp.int32))
-            first = int(first[0])
-            self.stats[f"prefill_b{L}"] += 1
-        if use_prefix:
-            from repro.serve.cache import cache_bytes
-            prefix_cache.insert(req.tokens, local, cache_bytes(local))
+            entry, hit_len = hit
+            if recurrent:
+                st.local = entry.cache
+            else:
+                from repro.models.lm import override_cache_pos
+                st.local = override_cache_pos(
+                    entry.cache, jnp.full((1,), hit_len, jnp.int32))
+            st.consumed = hit_len
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_reused_tokens"] += hit_len
+            self.stats["prefix_suffix_tokens"] += P - hit_len
         s = self.slots[slot]
         if s.out:                      # slot previously served a request
             self.stats["refills"] += 1
-        now = self._now()
-        s.rid, s.req, s.out = req.rid, req, [first]
-        s.remaining = req.gen - 1
-        s.t_admit = s.t_first = now
-        self.tokens[slot] = first
-        self.slotcache.write_slot(local, slot)
+        s.rid, s.req, s.out = req.rid, req, []
+        s.remaining = req.gen
+        s.pending = st
         self.stats["admits"] += 1
+
+    def _first_chunk_len(self, n: int, P: int) -> int:
+        """Prompt tokens the first prefill call of an admit consumes, given
+        a budget of ``n`` (<= ``P``). Ragged stacks prefill any prefix
+        (padded to a bucket); exact-length stacks quantize partial chunks
+        to multiples of the smallest bucket so chunked serving cannot grow
+        the compile count past the bucket table; recurrent stacks always
+        leave >= 1 token for the batch-1 walk (matching the cold-admit
+        path — their prefill never pads)."""
+        if self.ragged_ok:
+            return n
+        if self.contract != "recurrent" and n >= P:
+            return P                   # whole-prompt exact prefill
+        cap = min(n, P - 1) if self.contract == "recurrent" else n
+        lo = self.buckets[0]
+        return max(1, lo * (cap // lo))
+
+    def continue_admit(self, slot: int,
+                       budget: Optional[int] = None) -> bool:
+        """Consume up to ``budget`` prompt tokens of ``slot``'s in-flight
+        admit (the whole remainder when None); True once the prompt is
+        consumed and the slot is installed (first token on ``out``,
+        decode-eligible).
+
+        The chunk mechanics are pieces the engine already trusts: the
+        first chunk is a bucketed/chunk-quantized *prefix prefill* — exact
+        because every cache row carries only its own history (causal KV
+        rows, swa ring slots keyed by absolute position, recurrent state)
+        — and later chunks walk tokens one at a time through the batch-1
+        decode step, identical to the prefix-splice suffix path. The local
+        cache is installed with a single slot scatter at the end, so a
+        half-prefilled slot never touches the shared (possibly sharded)
+        cache.
+        """
+        s = self.slots[slot]
+        st = s.pending
+        if st is None:
+            raise ValueError(errors.msg("continue_without_begin",
+                                        slot=slot))
+        req = st.req
+        P = len(req.tokens)
+        budget = P - st.consumed if budget is None else max(1, int(budget))
+        nxt = None
+        if st.local is None:           # first chunk: prefix prefill
+            L0 = self._first_chunk_len(min(budget, P), P)
+            if self.ragged_ok:
+                toks = np.zeros((1, self._bucket(L0)), np.int32)
+                toks[0, :L0] = req.tokens[:L0]
+            else:
+                toks = np.asarray(req.tokens[:L0], np.int32)[None]
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.family == "encdec":
+                batch["frames"] = jnp.asarray(np.asarray(req.frames))[None]
+            nxt, st.local = self._prefill(self.params, batch,
+                                          jnp.asarray([L0], jnp.int32))
+            self.stats[f"prefill_b{self._stat_bucket(L0)}"] += 1
+            st.consumed = L0
+            budget -= L0
+            if st.prefix_cache is not None \
+                    and self.contract == "recurrent" \
+                    and L0 >= st.prefix_cache.min_hit:
+                # chunk state inserted under its exact token prefix: the
+                # whole-entry snapshot a later prompt extending it reuses
+                from repro.serve.cache import cache_bytes
+                st.prefix_cache.insert(req.tokens[:L0], st.local,
+                                       cache_bytes(st.local))
+        while budget > 0 and st.consumed < P:
+            t = int(req.tokens[st.consumed])
+            nxt, st.local = self._decode1(self.params,
+                                          jnp.full((1, 1), t, jnp.int32),
+                                          st.local)
+            st.consumed += 1
+            budget -= 1
+        if st.consumed < P:
+            self.stats["chunk_steps"] += 1
+            return False
+        st.first = int(nxt[0])
+        self._install(slot, st)
+        return True
+
+    def _install(self, slot: int, st: _Prefill):
+        """Prefill complete: insert into the prefix cache, scatter the
+        local cache into the slot lane, and make the slot decode-eligible
+        with its first generated token."""
+        if st.prefix_cache is not None:
+            from repro.serve.cache import cache_bytes
+            st.prefix_cache.insert(st.req.tokens, st.local,
+                                   cache_bytes(st.local))
+        s = self.slots[slot]
+        now = self._now()
+        s.out = [st.first]
+        s.remaining = st.req.gen - 1
+        s.t_admit = s.t_first = now
+        self.tokens[slot] = st.first
+        self.slotcache.write_slot(st.local, slot)
+        s.pending = None
+
+    def admit(self, req: Request, slot: int, prefix_cache=None):
+        """Prefill ``req`` and install it into ``slot`` — the atomic
+        composition of ``begin_admit`` + ``continue_admit`` with an
+        unbounded budget (byte-identical streams either way; chunking via
+        the scheduler changes *when* the work happens, never *what* is
+        computed).
+
+        With a ``prefix_cache`` (serve/prefix.py) on a prefix-eligible
+        config, a prompt sharing a cached prefix skips recomputing it; the
+        full prefill result is inserted back into the cache either way.
+        """
+        self.begin_admit(req, slot, prefix_cache=prefix_cache)
+        self.continue_admit(slot)
 
     def decode_step(self):
         """One shared decode step over every slot; returns retired slots."""
@@ -342,14 +441,17 @@ class ServeEngine:
                                   self.slotcache.cache)
         self.slotcache.cache = cache
         nxt = np.asarray(nxt)
-        active = self.active_count()
+        active = self.decoding_count()
         self.stats["decode_steps"] += 1
         self.stats["decode_lanes"] += active
         self.stats["max_concurrent"] = max(self.stats["max_concurrent"],
                                            active)
         retired = []
         for i, s in enumerate(self.slots):
-            if s.free:
+            # PREFILLING slots skip decode lanes: their lane computed
+            # garbage (stale token over a stale cache row, like a free
+            # slot's) and the install scatter overwrites the row wholesale
+            if s.free or s.pending is not None:
                 continue
             s.out.append(int(nxt[i]))
             self.tokens[i] = nxt[i]
@@ -366,7 +468,7 @@ class ServeEngine:
             rid=s.rid, tokens=np.asarray(s.out, np.int32),
             prompt_len=len(s.req.tokens), arrival=s.req.arrival,
             t_admit=s.t_admit, t_first=s.t_first, t_done=self._now())
-        s.rid, s.req, s.remaining = -1, None, 0
+        s.rid, s.req, s.remaining, s.pending = -1, None, 0, None
         if self.contract == "recurrent":
             self.slotcache.reset_slot(slot)
         return comp
@@ -377,12 +479,14 @@ class ServeEngine:
         tokens produced so far. The slot is refillable on the next admit,
         exactly like a normal retire — its stale cache lanes are inert
         (masked by ``pos``, or reset under the recurrent contract) until
-        overwritten."""
+        overwritten. Cancelling a PREFILLING slot discards the partial
+        prefill outright (its local cache was never installed): zero
+        tokens kept, slot immediately refillable."""
         s = self.slots[slot]
         if s.free:
             raise ValueError(errors.msg("cancel_free_slot", slot=slot))
         partial = list(s.out)
-        s.rid, s.req, s.remaining = -1, None, 0
+        s.rid, s.req, s.remaining, s.pending = -1, None, 0, None
         if self.contract == "recurrent":
             self.slotcache.reset_slot(slot)
         self.stats["cancels"] += 1
@@ -390,25 +494,40 @@ class ServeEngine:
 
     # -- driver -------------------------------------------------------------
 
-    def run(self, requests: List[Request], *, log=None) -> List[Completion]:
-        """Serve a trace to completion; returns completions in rid order."""
+    def run(self, requests: List[Request], *, log=None,
+            prefill_chunk: Optional[int] = None) -> List[Completion]:
+        """Serve a trace to completion; returns completions in rid order.
+
+        ``prefill_chunk`` hands the interleaving to a scheduler with that
+        per-iteration token budget (serve/scheduler.py): cold admits
+        prefill at most that many prompt tokens per engine iteration, so
+        occupied slots take a decode step between chunks. Streams are
+        byte-identical either way.
+        """
+        from repro.serve.scheduler import Scheduler
+        sched = Scheduler(self, prefill_chunk=prefill_chunk)
         queue = collections.deque(
             sorted(requests, key=lambda r: (r.arrival, r.rid)))
         done: dict = {}
         self.begin()
         while queue or self.active_count():
             now = self._now()
+            for slot in sched.advance():   # resume in-flight chunked admits
+                if self.slots[slot].remaining == 0:
+                    comp = self.retire(slot)
+                    done[comp.rid] = comp  # gen==1: prefill token only
             free = self.free_slots()
             while queue and queue[0].arrival <= now and free:
                 slot = free[0]
-                self.admit(queue.popleft(), slot)
-                if self.slots[slot].remaining == 0:
+                started = sched.start(queue.popleft(), slot)
+                if started and self.slots[slot].remaining == 0:
                     comp = self.retire(slot)
                     done[comp.rid] = comp  # gen==1: prefill token only
                 else:
                     free.pop(0)
-            if not self.active_count():
-                if queue:          # idle until the next arrival
+            if not sched.should_decode():
+                if not self.active_count() and queue:
+                    # idle until the next arrival
                     time.sleep(max(0.0, min(queue[0].arrival - self._now(),
                                             1e-3)))
                 continue
@@ -421,20 +540,24 @@ class ServeEngine:
                 done[comp.rid] = comp
         return [done[r.rid] for r in sorted(requests, key=lambda r: r.rid)]
 
-    def warmup(self, prompt_lens=(8,), gen: int = 2, prefix: bool = False):
+    def warmup(self, prompt_lens=(8,), gen: int = 2, prefix: bool = False,
+               prefill_chunk: Optional[int] = None):
         """Compile prefill (per bucket), decode, and the slot write outside
         any timed region; resets the engine afterwards. ``prefix=True``
         additionally compiles the batch-1 suffix decode the prefix-hit
-        admit path uses."""
-        if prefix:
-            if not self.prefix_eligible():
-                raise ValueError(errors.msg("prefix_ineligible",
-                                            name=self.cfg.name))
+        admit path uses; ``prefill_chunk`` warms the chunked-prefill path
+        instead (the same batch-1 decode, plus the chunk-sized first-chunk
+        prefill shapes, by running the warm trace through the scheduler)."""
+        if prefix and not self.prefix_eligible():
+            raise ValueError(errors.msg("prefix_ineligible",
+                                        name=self.cfg.name))
+        if prefix or prefill_chunk is not None:
             local = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
                                  self._cache_template(1))
             # the splice path = pos rewind (KV contract only) + batch-1
-            # suffix decode; compile both so the first prefix hit isn't
-            # charged compile time
+            # suffix decode — the same walk chunked admits take; compile
+            # both so the first prefix hit / chunk isn't charged compile
+            # time
             if self.contract != "recurrent":
                 from repro.models.lm import override_cache_pos
                 local = override_cache_pos(local, jnp.zeros((1,), jnp.int32))
@@ -453,7 +576,7 @@ class ServeEngine:
             reqs.append(Request(rid=-(i + 1),
                                 tokens=np.zeros((p,), np.int32), gen=gen,
                                 frames=frames))
-        self.run(reqs)
+        self.run(reqs, prefill_chunk=prefill_chunk)
         self.reset()
 
     def reset(self):

@@ -44,6 +44,15 @@ ERRORS = {
     "shard_ineligible":
         "{name}: slot-cache leaf {leaf!r} has no model-axis dim divisible "
         "by the {m}-way model axis; serve unsharded or re-mesh",
+    # scheduler: chunked-prefill policy (serve/scheduler.py)
+    "chunk_invalid":
+        "prefill chunk must be a positive token budget, got {chunk}",
+    "chunk_unsupported":
+        "{name}: chunked prefill needs the non-atomic begin_admit/"
+        "continue_admit slot surface; serve with prefill_chunk=None",
+    "continue_without_begin":
+        "continue_admit on slot {slot}: no admit in progress "
+        "(begin_admit first)",
     # fleet routing
     "router_needs_engines":
         "ReplicaRouter needs at least one engine",

@@ -20,17 +20,26 @@ hang up. This layer adds the request dynamics (docs/serving.md "Front-end"):
 - **prefix cache** — admits consult an LRU of recent prefill caches
   (serve/prefix.py) and skip recomputing a shared prompt prefix.
 
-The scheduling core is synchronous and engine-agnostic: it only uses the
-engine's slot surface (``free_slots`` / ``admit`` / ``decode_step`` /
-``retire`` / ``cancel`` / ``slots``), which is what lets the property suite
-drive the exact production code paths against a pure-Python fake engine and
-a slot-state oracle — and why a mesh-sharded ``ServeEngine``
-(``sharding=ServeSharding(...)``, serve/sharding.py) serves through this
-front-end unchanged: the slot surface is placement-blind, so admission,
-deadlines and cancellation compose with a model-split cache for free (the
-sharded fakes in tests/test_serve_properties.py pin exactly this). ``AsyncServeFrontend`` is the thin asyncio skin: one
-driver task steps the shared engine, any number of per-request streams
-multiplex over it.
+The driver is synchronous and engine-agnostic, and delegates the
+admit/prefill/decode *interleaving* to a ``Scheduler``
+(serve/scheduler.py): this layer keeps the request-visible semantics
+(handles, deadlines, terminal states), the scheduler decides when
+admission work happens. With ``prefill_chunk`` set, a cold admit consumes
+at most that many prompt tokens per ``step()`` — the slot sits in a
+PREFILLING state (occupied, no tokens yet) between chunks while
+co-resident slots keep decoding; token streams are byte-identical to
+atomic admits. Both layers only use the engine's slot surface
+(``free_slots`` / ``admit`` (or its ``begin_admit``/``continue_admit``
+split) / ``decode_step`` / ``retire`` / ``cancel`` / ``slots``), which is
+what lets the property suite drive the exact production code paths
+against a pure-Python fake engine and a slot-state oracle — and why a
+mesh-sharded ``ServeEngine`` (``sharding=ServeSharding(...)``,
+serve/sharding.py) serves through this front-end unchanged: the slot
+surface is placement-blind, so admission, deadlines and cancellation
+compose with a model-split cache for free (the sharded fakes in
+tests/test_serve_properties.py pin exactly this). ``AsyncServeFrontend``
+is the thin asyncio skin: one driver task steps the shared engine, any
+number of per-request streams multiplex over it.
 
 Timing: the front-end owns a monotonic clock (injectable for tests — every
 deadline decision is driven through ``clock()``, so expiry semantics are
@@ -50,7 +59,8 @@ import numpy as np
 
 from repro.serve import errors
 from repro.serve.engine import Request
-from repro.serve.queue import AdmissionQueue, Overloaded, Status, TERMINAL
+from repro.serve.queue import Overloaded, Status, TERMINAL
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -101,28 +111,34 @@ class Handle:
 
 
 class ServeFrontend:
-    """Deterministic scheduling core: one ``step()`` = one engine iteration
-    (expire -> admit -> decode -> retire).
+    """Deterministic driver core: one ``step()`` = one engine iteration
+    (expire -> resume chunked prefills -> admit -> decode -> retire).
 
     Parameters
     ----------
-    engine      : a ``ServeEngine`` (or any object with its slot surface).
-    queue_depth : bounded waiting room beyond the slots; 0 disables queueing
-                  entirely (admit-or-reject).
-    policy      : "fifo" | "spf" (shortest-prompt-first admission).
-    prefix_cache: optional ``PrefixCache`` consulted on every admit.
-    clock       : zero-arg callable returning seconds; defaults to a
-                  monotonic clock anchored at construction.
+    engine       : a ``ServeEngine`` (or any object with its slot surface).
+    queue_depth  : bounded waiting room beyond the slots; 0 disables
+                   queueing entirely (admit-or-reject).
+    policy       : "fifo" | "spf" (shortest-prompt-first admission).
+    prefix_cache : optional ``PrefixCache`` consulted on every admit.
+    prefill_chunk: max prompt tokens one admit consumes per ``step()``
+                   (serve/scheduler.py); None = atomic whole-prompt admits.
+    clock        : zero-arg callable returning seconds; defaults to a
+                   monotonic clock anchored at construction.
     """
 
     def __init__(self, engine, *, queue_depth: int = 16,
-                 policy: str = "fifo", prefix_cache=None, clock=None):
+                 policy: str = "fifo", prefix_cache=None, clock=None,
+                 prefill_chunk: Optional[int] = None):
         self.engine = engine
-        self.queue = AdmissionQueue(queue_depth, policy=policy)
         self.prefix_cache = prefix_cache
         if prefix_cache is not None and not engine.prefix_eligible():
             raise ValueError(errors.msg("prefix_ineligible",
                                         name=engine.cfg.name))
+        self.scheduler = Scheduler(engine, prefill_chunk=prefill_chunk,
+                                   queue_depth=queue_depth, policy=policy,
+                                   prefix_cache=prefix_cache)
+        self.queue = self.scheduler.queue
         if clock is None:
             t0 = time.perf_counter()
             clock = lambda: time.perf_counter() - t0  # noqa: E731
@@ -161,6 +177,7 @@ class ServeFrontend:
             return True
         slot = next(s for s, hh in self._by_slot.items() if hh is h)
         h.tokens = [int(t) for t in self.engine.cancel(slot)]
+        self.scheduler.release(slot)
         del self._by_slot[slot]
         self._finish(h, Status.CANCELLED)
         return True
@@ -176,21 +193,28 @@ class ServeFrontend:
         # 1. queued deadline expiry: never touches the engine
         for h in self.queue.take_expired(now):
             self._finish(h, Status.EXPIRED)
-        # 2. running deadline expiry: retire hook frees the slot mid-flight
+        # 2. running deadline expiry: retire hook frees the slot mid-flight.
+        #    A slot expiring mid-chunked-prefill discards the partial
+        #    prefill outright — zero tokens kept, slot refillable below
         for slot, h in list(self._by_slot.items()):
             if h.deadline is not None and now >= h.deadline:
                 h.tokens = [int(t) for t in self.engine.cancel(slot)]
+                self.scheduler.release(slot)
                 del self._by_slot[slot]
                 self._finish(h, Status.EXPIRED)
-        # 3. refill free slots from the queue (policy order)
+        # 3. resume in-flight chunked prefills: one chunk per slot per step
+        #    (slots finishing their prompt join this step's decode)
+        for slot in self.scheduler.advance():
+            self._installed(self._by_slot[slot], slot)
+        # 4. refill free slots from the queue (policy order)
         while len(self.queue):
             free = self.engine.free_slots()
             free = [s for s in free if s not in self._by_slot]
             if not free:
                 break
             self._admit(self.queue.pop(), free[0])
-        # 4. one shared decode step; stream tokens out, retire the finished
-        if self.engine.active_count():
+        # 5. one shared decode step; stream tokens out, retire the finished
+        if self.scheduler.should_decode():
             retired = self.engine.decode_step()
             for slot, h in self._by_slot.items():
                 h.tokens = [int(t) for t in self.engine.slots[slot].out]
@@ -212,6 +236,7 @@ class ServeFrontend:
         if take is None:
             return
         for slot, tokens in take():
+            self.scheduler.release(slot)
             h = self._by_slot.pop(slot, None)
             if h is not None and not h.finished:
                 h.tokens = [int(t) for t in tokens]
@@ -224,17 +249,33 @@ class ServeFrontend:
             # request nobody is waiting on
             self._finish(h, Status.EXPIRED)
             return
-        self.engine.admit(h.req, slot, prefix_cache=self.prefix_cache)
+        if not self.scheduler.start(h.req, slot):
+            # chunked prefill under way: the slot is occupied (PREFILLING)
+            # but no token exists yet — t_first waits for installation
+            h.status = Status.RUNNING
+            h.t_admit = self.clock()
+            self._by_slot[slot] = h
+            return
+        self._installed(h, slot)
+
+    def _installed(self, h: Handle, slot: int):
+        """Prefill finished — atomically at admit, or on the last chunk —
+        and the first token exists on the slot. gen==1 retires right here;
+        a deadline that elapsed during prefill keeps the prefill token and
+        frees the slot before it ever decodes."""
         h.status = Status.RUNNING
-        h.t_admit = h.t_first = self.clock()
-        h.tokens = [int(t) for t in self.engine.slots[slot].out]
+        t = self.clock()
+        if h.t_admit is None:          # atomic admit: t_admit == t_first
+            h.t_admit = t
+        h.t_first = t
+        h.tokens = [int(tk) for tk in self.engine.slots[slot].out]
         if self.engine.slots[slot].remaining == 0:
+            self._by_slot.pop(slot, None)
             self.engine.retire(slot)         # gen==1 completes at admit
             self._finish(h, Status.DONE)
         elif h.deadline is not None and self.clock() >= h.deadline:
-            # deadline elapsed DURING prefill: keep the prefill token,
-            # free the slot before it ever decodes
-            h.tokens = [int(t) for t in self.engine.cancel(slot)]
+            h.tokens = [int(tk) for tk in self.engine.cancel(slot)]
+            self._by_slot.pop(slot, None)
             self._finish(h, Status.EXPIRED)
         else:
             self._by_slot[slot] = h

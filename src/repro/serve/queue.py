@@ -1,26 +1,21 @@
-"""Admission control for the serving front-end: bounded queue + backpressure.
+"""Front-end request lifecycle types + typed backpressure result.
 
-When every engine slot is occupied, incoming requests wait here — FIFO by
-default, shortest-prompt-first with ``policy="spf"`` (the scheduling knob
-the ROADMAP asks for: short prompts prefill cheaply and free their slot
-sooner, cutting p50 ttft at a bounded fairness cost). The queue is bounded:
-beyond ``depth`` waiting requests the front-end stops accepting and rejects
-with a typed :class:`Overloaded` result instead of growing an unbounded
-backlog — overload must surface as fast failure, not as unbounded latency.
+The admission *policies* (the bounded FIFO/shortest-prompt-first waiting
+room, deadline expiry in the queue) are scheduler-owned since the
+chunked-prefill PR: :class:`~repro.serve.scheduler.AdmissionQueue` lives in
+``serve/scheduler.py`` next to the interleaving policy that drives it, and
+is re-exported here so existing imports keep working. What remains in this
+module is the request-visible state machine: the :class:`Status` lifecycle
+(exactly one terminal per request, property-tested) and the typed
+:class:`Overloaded` rejection the bounded queue degrades into — overload
+must surface as fast failure, not as unbounded latency.
 
-Deadlines are enforced *in the queue* too: a request whose deadline passes
-while it waits is expired without ever touching the engine (no prefill work
-for a request nobody is waiting on).
-
-Pure Python, no jax — this module is the scheduling state machine the
-property suite (``tests/test_serve_properties.py``) drives against a
-slot-state oracle.
+Pure Python, no jax.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import List, Optional
 
 
 class Status(enum.Enum):
@@ -63,75 +58,7 @@ class Overloaded:
                 f"(depth {self.queue_depth})")
 
 
-class AdmissionQueue:
-    """Bounded waiting room between ``submit`` and a free engine slot.
-
-    Items must expose ``prompt_len`` and ``deadline`` attributes (the
-    front-end queues its request handles). ``push`` refuses items beyond
-    ``depth`` — the caller turns that into an :class:`Overloaded` result.
-
-    ``policy``:
-      - ``"fifo"`` — strict arrival order.
-      - ``"spf"`` — shortest-prompt-first: ``pop`` picks the waiting item
-        with the fewest prompt tokens (ties broken by arrival order, so
-        equal-length requests stay FIFO).
-    """
-
-    POLICIES = ("fifo", "spf")
-
-    def __init__(self, depth: int, policy: str = "fifo"):
-        if depth < 0:
-            raise ValueError(f"queue depth must be >= 0, got {depth}")
-        if policy not in self.POLICIES:
-            raise ValueError(f"unknown queue policy {policy!r}; "
-                             f"known: {self.POLICIES}")
-        self.depth, self.policy = depth, policy
-        self._items: List = []
-
-    def __len__(self) -> int:
-        return len(self._items)
-
-    def __iter__(self):
-        return iter(self._items)
-
-    @property
-    def full(self) -> bool:
-        return len(self._items) >= self.depth
-
-    def push(self, item) -> bool:
-        """Enqueue ``item``; False (and no side effect) when full."""
-        if self.full:
-            return False
-        self._items.append(item)
-        return True
-
-    def pop(self):
-        """Next item to admit under the configured policy."""
-        if not self._items:
-            raise IndexError("pop from empty AdmissionQueue")
-        if self.policy == "spf":
-            i = min(range(len(self._items)),
-                    key=lambda j: self._items[j].prompt_len)
-        else:
-            i = 0
-        return self._items.pop(i)
-
-    def take_expired(self, now: float) -> List:
-        """Remove and return every waiting item whose deadline has passed
-        (``deadline <= now``); queue order of the survivors is preserved."""
-        expired = [it for it in self._items
-                   if it.deadline is not None and it.deadline <= now]
-        if expired:
-            self._items = [it for it in self._items
-                           if not (it.deadline is not None
-                                   and it.deadline <= now)]
-        return expired
-
-    def remove(self, item) -> bool:
-        """Remove a specific waiting item (explicit cancel); False if the
-        item is not queued."""
-        try:
-            self._items.remove(item)
-            return True
-        except ValueError:
-            return False
+# back-compat re-export: the admission policies moved into the scheduling
+# layer (see module docstring); import at the bottom so the annotation
+# types above exist before scheduler-side consumers resolve this module
+from repro.serve.scheduler import AdmissionQueue  # noqa: E402,F401

@@ -7,9 +7,14 @@ but that win only materializes if the serving tier can spread traffic
 across engines. ``ReplicaRouter`` does that routing while *speaking the
 same engine-agnostic slot surface the front-end already consumes*
 (``free_slots`` / ``admit`` / ``decode_step`` / ``retire`` / ``cancel`` /
-``begin`` / ``slots`` / ``active_count``), so ``ServeFrontend`` and
+``begin`` / ``slots`` / ``active_count``, plus the non-atomic
+``begin_admit`` / ``continue_admit`` / ``decoding_count`` split the
+scheduler's chunked-prefill policy drives), so ``ServeFrontend`` and
 ``AsyncServeFrontend`` layer on top of a fleet exactly as they layer on
-one engine (docs/serving.md "Multi-replica routing").
+one engine (docs/serving.md "Multi-replica routing"). A replica dying
+mid-chunked-prefill re-dispatches like any other orphan: its virtual slot
+has delivered zero tokens, so the survivor re-prefills from the prompt —
+greedy determinism keeps the stream exact.
 
 Design: **virtual slots**. The router exposes ``sum(n_slots)`` virtual
 slot ids. The front-end admits into a virtual id; the router *binds* it to
@@ -150,6 +155,7 @@ class ReplicaRouter:
                        for _ in range(sum(e.n_slots for e in engines))]
         self._pending: collections.deque = collections.deque()  # gids
         self._failed: list = []             # (gid, tokens) for take_failed
+        self._prefilling: set = set()       # gids mid-chunked-prefill
         self._pool = ThreadPoolExecutor(
             max_workers=len(engines),
             thread_name_prefix="replica-decode")
@@ -199,6 +205,16 @@ class ReplicaRouter:
     def active_count(self) -> int:
         return sum(v.state in (_VState.BOUND, _VState.PENDING)
                    for v in self.vslots)
+
+    def decoding_count(self) -> int:
+        """Virtual slots a decode step can serve: BOUND slots past their
+        prefill, plus orphans awaiting re-dispatch (stepping the fleet is
+        what re-dispatches them). PREFILLING slots are excluded — they
+        advance via ``continue_admit``, not decode lanes."""
+        return sum(1 for g, v in enumerate(self.vslots)
+                   if (v.state is _VState.BOUND
+                       and g not in self._prefilling)
+                   or v.state is _VState.PENDING)
 
     # -- routing policy -----------------------------------------------------
 
@@ -251,9 +267,63 @@ class ReplicaRouter:
             self.rstats["failed"] += 1
         self.rstats["routed_admits"] += 1
 
-    def _bind(self, gid: int, req: Request, prefix_cache=None) -> bool:
+    def begin_admit(self, req: Request, slot: int, prefix_cache=None):
+        """Non-atomic admit surface (serve/scheduler.py chunked prefill):
+        bind virtual id ``slot`` and ``begin_admit`` on a policy-chosen
+        replica — no prefill work yet. Death handling matches ``admit``:
+        retries on survivors, FAILED with none left, never raises."""
+        v = self.vslots[slot]
+        assert v.free, f"admit into non-free virtual slot {slot}"
+        v.state, v.rid, v.req = _VState.BOUND, req.rid, req
+        v.out, v.remaining, v.base = [], req.gen, 0
+        v.t_admit = self._now() if self._t0 is not None else 0.0
+        if self._bind(slot, req, prefix_cache=prefix_cache, begin=True):
+            self._prefilling.add(slot)
+        else:
+            v.state = _VState.FAILED
+            self._failed.append(slot)
+            self.rstats["failed"] += 1
+        self.rstats["routed_admits"] += 1
+
+    def continue_admit(self, slot: int,
+                       budget: Optional[int] = None) -> bool:
+        """One chunk of prefill for virtual slot ``slot`` on its bound
+        replica; True once its prompt is consumed (first token mirrored
+        into the virtual stream). A replica dying mid-prefill orphans the
+        slot with zero delivered tokens, so re-dispatch re-prefills from
+        the prompt on a survivor — atomically, and greedy determinism
+        keeps the stream byte-identical."""
+        v = self.vslots[slot]
+        if v.state is _VState.FAILED:
+            return False                   # reaped via take_failed()
+        if slot not in self._prefilling:
+            return True    # already completed by an atomic re-dispatch
+        if v.state is _VState.BOUND:
+            try:
+                done = self.replicas[v.replica].engine.continue_admit(
+                    v.pslot, budget)
+            except Exception:  # noqa: BLE001 - replica death is the point
+                self._fail_replica(v.replica)
+                done = None
+            if done is not None:
+                if not done:
+                    return False
+                self._prefilling.discard(slot)
+                self._sync_vslot(slot)
+                return True
+        # PENDING (possibly just orphaned above): try a re-dispatch now —
+        # decode lanes may all be prefilling, so waiting for decode_step's
+        # re-dispatch could livelock. A successful re-dispatch prefills
+        # the whole prompt atomically and clears the prefilling mark.
+        self._redispatch()
+        return slot not in self._prefilling and v.state is _VState.BOUND
+
+    def _bind(self, gid: int, req: Request, prefix_cache=None,
+              begin: bool = False) -> bool:
         """Admit ``req`` on a policy-chosen replica; retries across
-        replica deaths. True on success (vslot bound + tokens synced)."""
+        replica deaths. True on success (vslot bound + tokens synced).
+        ``begin=True`` binds via the replica's ``begin_admit`` (no prefill
+        work, nothing to sync yet)."""
         v = self.vslots[gid]
         while True:
             i = self._choose(req)
@@ -264,7 +334,10 @@ class ReplicaRouter:
             cache = prefix_cache if prefix_cache is not None else (
                 self._caches[i] if self._caches is not None else None)
             try:
-                r.engine.admit(req, pslot, prefix_cache=cache)
+                if begin:
+                    r.engine.begin_admit(req, pslot, prefix_cache=cache)
+                else:
+                    r.engine.admit(req, pslot, prefix_cache=cache)
             except Exception:  # noqa: BLE001 - replica death is the point
                 self._fail_replica(i)
                 continue
@@ -273,7 +346,8 @@ class ReplicaRouter:
             # the last token already delivered (greedy determinism) — so
             # it maps to global index len(out)-1 on re-dispatch, 0 cold
             v.base = max(0, len(v.out) - 1)
-            self._sync_vslot(gid)
+            if not begin:
+                self._sync_vslot(gid)
             return True
 
     # -- the shared decode step ---------------------------------------------
@@ -285,7 +359,8 @@ class ReplicaRouter:
         every token produced before the failing step."""
         self._redispatch()
         stepping = [i for i, r in enumerate(self.replicas)
-                    if r.live and r.engine.active_count()]
+                    if r.live and getattr(r.engine, "decoding_count",
+                                          r.engine.active_count)()]
         if len(stepping) == 1:
             results = {stepping[0]: self._step_one(stepping[0])}
         else:
@@ -301,6 +376,8 @@ class ReplicaRouter:
                 continue
             if self.replicas[v.replica].state is ReplicaState.DOWN:
                 continue                    # orphaned by _fail_replica
+            if gid in self._prefilling:
+                continue                    # no tokens until install
             self._sync_vslot(gid)
             if v.remaining == 0:
                 retired.append(gid)
@@ -381,6 +458,9 @@ class ReplicaRouter:
             v.state = _VState.BOUND
             if self._bind(gid, cont):
                 self._pending.popleft()
+                # a mid-prefill orphan re-prefills its whole prompt here
+                # (atomic admit), so it is no longer PREFILLING
+                self._prefilling.discard(gid)
                 self.rstats["redispatches"] += 1
             else:                # chosen survivors died mid-bind: loop
                 v.state = _VState.PENDING
@@ -434,6 +514,7 @@ class ReplicaRouter:
         return partial
 
     def _release(self, gid: int):
+        self._prefilling.discard(gid)
         self.vslots[gid] = _VSlot()
 
     # -- drain / health surface ---------------------------------------------

@@ -3,8 +3,14 @@
 ``FleetFakeEngine`` exposes exactly the engine-agnostic slot surface the
 front-end and ``ReplicaRouter`` consume (``free_slots`` / ``admit`` /
 ``decode_step`` / ``retire`` / ``cancel`` / ``begin`` / ``slots`` /
-``active_count``) with no jax anywhere, so fleet-level scheduling paths
-run instantly and deterministically on CI.
+``active_count``), plus the non-atomic ``begin_admit`` /
+``continue_admit`` / ``decoding_count`` split that the scheduler's
+chunked-prefill policy drives, with no jax anywhere, so fleet-level
+scheduling paths run instantly and deterministically on CI. Like the
+real engine, a mid-prefill slot holds its work aside and "installs"
+atomically when the prompt is consumed — the recurrent fake only
+scatters its state vector at install, so the property suites can check
+that chunk writes never leak into the shared state before completion.
 
 Two properties matter for fleet tests:
 
@@ -32,6 +38,8 @@ from __future__ import annotations
 import time
 from typing import List, Optional
 
+from repro.serve import errors
+
 FLEET_TOKEN_BASE = 10_000
 
 
@@ -45,6 +53,7 @@ class _FakeSlot:
     def __init__(self):
         self.rid, self.remaining, self.out, self.req = -1, 0, [], None
         self._next = 0                     # next stream index to emit
+        self.pending = None                # prompt tokens left to prefill
 
     @property
     def free(self):
@@ -74,7 +83,8 @@ class FleetFakeEngine:
         self.step_time = step_time
         self._prefix_ok = prefix_ok
         self.slots = [_FakeSlot() for _ in range(n_slots)]
-        self.stats = {"admits": 0, "decode_steps": 0, "cancels": 0}
+        self.stats = {"admits": 0, "decode_steps": 0, "cancels": 0,
+                      "chunk_steps": 0}
         self.fail_next_admit = False
         self.fail_next_decode = False
         self.cache_bytes = 0
@@ -104,18 +114,60 @@ class FleetFakeEngine:
                 return i + 1
         return 0
 
-    def admit(self, req, slot: int, prefix_cache=None):
+    def decoding_count(self) -> int:
+        """Occupied slots past their prefill (eligible for decode lanes);
+        a PREFILLING slot is active but not decoding."""
+        return sum((not s.free) and s.pending is None for s in self.slots)
+
+    def begin_admit(self, req, slot: int, prefix_cache=None):
+        """First half of the non-atomic admit: bind the slot, no prefill
+        work yet. The slot is PREFILLING (skipped by decode) until
+        ``continue_admit`` consumes the whole prompt."""
         if self.fail_next_admit:
             self.fail_next_admit = False
             raise RuntimeError("injected admit failure")
         s = self.slots[slot]
         assert s.free, f"admit into occupied slot {slot}"
         self.stats["admits"] += 1
-        i0 = self._start_index(req)
         s.rid, s.req = req.rid, req
-        s.out = [fleet_token(req.rid, i0)]        # the "prefill" token
-        s._next = i0 + 1
-        s.remaining = req.gen - 1
+        s.out = []
+        s._next = self._start_index(req)
+        s.remaining = req.gen
+        s.pending = len(req.tokens)
+
+    def continue_admit(self, slot: int,
+                       budget: Optional[int] = None) -> bool:
+        """Consume up to ``budget`` prompt tokens (the whole remainder
+        when None); True once the prompt is consumed and the first
+        token is installed."""
+        s = self.slots[slot]
+        if s.pending is None:
+            raise ValueError(errors.msg("continue_without_begin",
+                                        slot=slot))
+        take = s.pending if budget is None \
+            else min(max(1, int(budget)), s.pending)
+        s.pending -= take
+        if s.pending:
+            self.stats["chunk_steps"] += 1
+            return False
+        self._install(slot)
+        return True
+
+    def _install(self, slot: int):
+        """Prompt fully consumed: emit the prefill token. The recurrent
+        subclass also scatters its state vector here — held aside until
+        completion, exactly like the real engine's slot-cache write."""
+        s = self.slots[slot]
+        s.out = [fleet_token(s.rid, s._next)]
+        s._next += 1
+        s.remaining = s.req.gen - 1
+        s.pending = None
+
+    def admit(self, req, slot: int, prefix_cache=None):
+        """Atomic admit: ``begin_admit`` + ``continue_admit`` over the
+        whole prompt in one call."""
+        self.begin_admit(req, slot, prefix_cache=prefix_cache)
+        self.continue_admit(slot)
 
     def decode_step(self) -> List[int]:
         if self.fail_next_decode:
@@ -126,7 +178,7 @@ class FleetFakeEngine:
         self.stats["decode_steps"] += 1
         retired = []
         for i, s in enumerate(self.slots):
-            if s.free or s.remaining == 0:
+            if s.free or s.pending is not None or s.remaining == 0:
                 continue
             s.out.append(fleet_token(s.rid, s._next))
             s._next += 1
@@ -139,7 +191,7 @@ class FleetFakeEngine:
         s = self.slots[slot]
         assert not s.free, f"retire of free slot {slot}"
         comp = _FakeCompletion(s.rid, list(s.out))
-        s.rid, s.req, s.remaining = -1, None, 0
+        s.rid, s.req, s.remaining, s.pending = -1, None, 0, None
         return comp
 
     def cancel(self, slot: int) -> List[int]:
@@ -147,7 +199,7 @@ class FleetFakeEngine:
         if s.free:
             raise ValueError(f"cancel of free slot {slot}")
         partial = list(s.out)
-        s.rid, s.req, s.remaining = -1, None, 0
+        s.rid, s.req, s.remaining, s.pending = -1, None, 0, None
         self.stats["cancels"] += 1
         return partial
 
@@ -176,17 +228,22 @@ class RecurrentFleetFakeEngine(FleetFakeEngine):
     def _zero():
         return [0] * FAKE_STATE_SIZE
 
-    def admit(self, req, slot: int, prefix_cache=None):
+    def begin_admit(self, req, slot: int, prefix_cache=None):
         assert self.state[slot] == self._zero(), \
             f"admit into slot {slot} over stale recurrent state"
-        super().admit(req, slot, prefix_cache=prefix_cache)
-        # scatter: the whole prompt + the prefill token, processed at once
-        self.state[slot] = [req.rid + 1, len(req.tokens) + 1] \
+        super().begin_admit(req, slot, prefix_cache=prefix_cache)
+
+    def _install(self, slot: int):
+        super()._install(slot)
+        s = self.slots[slot]
+        # scatter: the whole prompt + the prefill token, written at once
+        # when the (possibly chunked) prefill completes — never earlier
+        self.state[slot] = [s.rid + 1, len(s.req.tokens) + 1] \
             + [0] * (FAKE_STATE_SIZE - 2)
 
     def decode_step(self) -> List[int]:
         stepped = [i for i, s in enumerate(self.slots)
-                   if not s.free and s.remaining > 0]
+                   if not s.free and s.pending is None and s.remaining > 0]
         retired = super().decode_step()
         for i in stepped:                  # the one shared recurrent step
             self.state[i][1] += 1
@@ -213,6 +270,11 @@ class RecurrentFleetFakeEngine(FleetFakeEngine):
                 f"slot {i}: state grew to {len(st)}"
             if s.free:
                 assert st == self._zero(), f"slot {i}: stale state {st}"
+            elif s.pending is not None:
+                # mid-chunked-prefill: work is held aside, nothing may
+                # touch the shared state until install
+                assert st == self._zero(), \
+                    f"slot {i}: state scattered before install: {st}"
             else:
                 want = [s.rid + 1, len(s.req.tokens) + len(s.out)] \
                     + [0] * (FAKE_STATE_SIZE - 2)

@@ -184,6 +184,24 @@ def test_sharded_serving_flags_documented():
         assert needle in serving, needle
 
 
+def test_scheduler_flags_documented():
+    """The scheduler's chunked-prefill flag must exist in the CLI and be
+    documented in cli.md, and serving.md must carry the Scheduler section
+    with the layer diagram, the chunk-interleaving exactness argument,
+    and the per-contract eligibility table (belt-and-braces on top of
+    the generic two-direction coverage)."""
+    assert "--prefill-chunk" in _serve_flags()
+    cli = open(os.path.join(ROOT, "docs", "cli.md"), encoding="utf-8").read()
+    assert "`--prefill-chunk`" in cli
+    serving = open(os.path.join(ROOT, "docs", "serving.md"),
+                   encoding="utf-8").read()
+    assert "## Scheduler" in serving
+    for needle in ("begin_admit", "continue_admit", "PREFILLING",
+                   "byte-identical", "chunk-eligible", "chunk_invalid",
+                   "chunk_unsupported", "write_slot", "scheduler_trace.md"):
+        assert needle in serving, needle
+
+
 def test_readme_documents_subprocess_marker():
     """README must explain deselecting the environment-sensitive
     subprocess tests (`-m "not subprocess"`)."""

@@ -232,3 +232,97 @@ def test_serve_loop_returns_exactly_gen_matching_tokens(trained_lm):
                                       np.asarray(nxt[:, 0]), f"step {t}")
         seq = jnp.concatenate([seq, nxt], axis=1)
     assert t_prefill > 0 and t_decode > 0
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (serve/scheduler.py policy over the non-atomic admit)
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_token_identical(trained_lm):
+    """run(prefill_chunk=c) must stream byte-identically to the unchunked
+    engine on the same trace, for several chunk sizes."""
+    cfg, model, params = trained_lm
+    trace = synthetic_trace(5, cfg.vocab_size, seed=11,
+                            prompt_range=(4, 20), gen_range=(2, 8))
+    base = ServeEngine(model, params, n_slots=2, max_len=48).run(trace)
+    for c in (1, 3, 7):
+        eng = ServeEngine(model, params, n_slots=2, max_len=48)
+        comps = eng.run(trace, prefill_chunk=c)
+        for b, ch in zip(base, comps):
+            assert b.tokens.tolist() == ch.tokens.tolist(), (c, b.rid)
+        assert eng.stats["admits"] == len(trace)
+        assert all(s.free and s.pending is None for s in eng.slots)
+
+
+def test_begin_continue_lifecycle(trained_lm):
+    """The non-atomic admit surface: a PREFILLING slot is occupied but
+    not decoding; continue_admit without begin_admit is refused from the
+    errors table; installation is all-at-once."""
+    from repro.serve import ERRORS
+    cfg, model, params = trained_lm
+    eng = ServeEngine(model, params, n_slots=2, max_len=32)
+    eng.begin()
+    import re
+    with pytest.raises(ValueError,
+                       match=re.escape(
+                           ERRORS["continue_without_begin"].format(
+                               slot=0))):
+        eng.continue_admit(0)
+    req = Request(rid=0, tokens=np.arange(1, 11, dtype=np.int32), gen=3)
+    eng.begin_admit(req, 0)
+    assert eng.active_count() == 1 and eng.decoding_count() == 0
+    assert not eng.slots[0].free and eng.slots[0].out == []
+    steps = 0
+    while not eng.continue_admit(0, 3):
+        steps += 1
+        assert steps < 10
+    assert steps > 0 and eng.stats["chunk_steps"] == steps
+    assert eng.decoding_count() == 1
+    assert len(eng.slots[0].out) == 1       # exactly the prefill token
+    base = ServeEngine(model, params, n_slots=1, max_len=32).run([req])
+    assert eng.slots[0].out[0] == int(base[0].tokens[0])
+    eng.cancel(0)
+    assert eng.active_count() == 0
+
+
+def test_cancel_mid_chunked_prefill_keeps_zero_tokens(trained_lm):
+    """Cancelling a PREFILLING slot discards the partial prefill: zero
+    tokens kept, the slot is immediately refillable."""
+    cfg, model, params = trained_lm
+    eng = ServeEngine(model, params, n_slots=1, max_len=32)
+    eng.begin()
+    eng.begin_admit(Request(rid=0, tokens=np.arange(1, 11, dtype=np.int32),
+                            gen=4), 0)
+    assert not eng.continue_admit(0, 2)     # mid-prefill
+    assert eng.cancel(0) == []
+    assert eng.slots[0].free and eng.slots[0].pending is None
+    # refill over the same slot still serves exactly
+    req = Request(rid=1, tokens=np.arange(2, 8, dtype=np.int32), gen=3)
+    comps = eng.run([req])
+    assert _greedy_chain_ok(model, params, req, comps[0].tokens)
+
+
+def test_prefill_stats_keys_are_bounded():
+    """Regression: the exact-length fallback used to key prefill stats by
+    raw prompt length — one counter per distinct length, an unbounded
+    cardinality. Keys must now come from the finite bucket set, on both
+    the exact-length fallback (swa) and the ragged path."""
+    cfg = tiny_cfg("gemma3-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    reqs = [Request(rid=i, tokens=rng.randint(0, cfg.vocab_size,
+                                              size=p).astype(np.int32),
+                    gen=2)
+            for i, p in enumerate((3, 5, 6, 7, 9))]   # 5 distinct lengths
+    eng = ServeEngine(model, params, n_slots=2, max_len=24)
+    assert not eng.ragged_ok                # the exact-length fallback
+    eng.run(reqs)
+    allowed = {f"prefill_b{b}" for b in eng.buckets}
+    seen = {k for k in eng.stats if k.startswith("prefill_b")}
+    assert seen and seen <= allowed, (seen, allowed)
+    # chunked serving on the same engine family stays bounded too
+    eng2 = ServeEngine(model, params, n_slots=2, max_len=24)
+    eng2.run(reqs, prefill_chunk=2)
+    seen2 = {k for k in eng2.stats if k.startswith("prefill_b")}
+    assert seen2 and seen2 <= allowed, (seen2, allowed)

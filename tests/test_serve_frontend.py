@@ -428,3 +428,69 @@ def test_engine_admit_and_cancel_guards(lm):
     with pytest.raises(ValueError, match=re.escape(
             errors.msg("cancel_free_slot", slot=0))):
         eng.cancel(0)                             # nothing running there
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill through the front-end (serve/scheduler.py)
+# ---------------------------------------------------------------------------
+
+def test_frontend_chunked_matches_atomic_byte_identical(lm):
+    """prefill_chunk must not change a single token: the chunked front-end
+    streams byte-identically to the atomic one on the same trace."""
+    model, params = lm
+    trace = synthetic_trace(n=6, seed=5, rate=50.0, prompt_range=(4, 12),
+                            gen_range=(2, 6), vocab=model.cfg.vocab_size)
+    base = ServeFrontend(_engine(lm), queue_depth=8).run(trace)
+    chunked = ServeFrontend(_engine(lm), queue_depth=8,
+                            prefill_chunk=3).run(trace)
+    assert all(h.status is Status.DONE for h in chunked)
+    for b, c in zip(base, chunked):
+        assert b.tokens == c.tokens, f"rid {b.rid}: chunked stream diverged"
+
+
+def test_deadline_expired_mid_chunked_prefill(lm):
+    """Deadline passes between chunks of a cold prefill: the partial
+    prefill is discarded outright — ZERO tokens kept (contrast the atomic
+    case, which keeps the prefill token), the cancel is counted, and the
+    slot is immediately refillable."""
+    eng = _engine(lm, n_slots=1)
+    clk = ManualClock()
+    fe = ServeFrontend(eng, queue_depth=4, clock=clk, prefill_chunk=2)
+    h = fe.submit(_req(0, 9, 6, deadline=5.0))    # 9 tokens = 5 chunks
+    assert h.status is Status.RUNNING             # PREFILLING: occupied,
+    assert h.tokens == []                         # no token yet
+    fe.step()                                     # one more chunk
+    assert h.status is Status.RUNNING and h.tokens == []
+    clk.advance(10.0)                             # deadline passes mid-way
+    fe.step()
+    assert h.status is Status.EXPIRED
+    assert h.tokens == []                         # partial prefill discarded
+    assert eng.stats["cancels"] == 1
+    assert eng.active_count() == 0                # slot refillable
+    g = fe.submit(_req(1, 4, 2))
+    while not g.finished:
+        fe.step()
+    assert g.status is Status.DONE and len(g.tokens) == 2
+
+
+def test_chunked_prefill_interleaves_with_decode(lm):
+    """The tentpole behavior: while a long prompt prefills in chunks, a
+    co-resident decoding slot keeps producing a token EVERY step — the
+    long admit never freezes it."""
+    eng = _engine(lm, n_slots=2)
+    clk = ManualClock()
+    fe = ServeFrontend(eng, queue_depth=4, clock=clk, prefill_chunk=2)
+    short = fe.submit(_req(0, 2, 12))             # one chunk: installs at
+    assert short.status is Status.RUNNING         # submit, decodes steadily
+    assert len(short.tokens) == 1
+    long = fe.submit(_req(1, 10, 2))              # 10 tokens = 4+ chunks
+    assert long.status is Status.RUNNING and long.tokens == []
+    while long.tokens == [] and not short.finished:
+        before = len(short.tokens)
+        fe.step()
+        assert len(short.tokens) == before + 1, \
+            "co-resident decode stalled during chunked prefill"
+    assert eng.stats["chunk_steps"] >= 3
+    while not (short.finished and long.finished):
+        fe.step()
+    assert short.status is Status.DONE and long.status is Status.DONE

@@ -1,13 +1,19 @@
 """Property-based slot-lifecycle tests for the serving front-end.
 
-The front-end's scheduling core (`ServeFrontend.step`) is engine-agnostic:
-it only touches the engine's slot surface (``free_slots`` / ``admit`` /
-``decode_step`` / ``retire`` / ``cancel`` / ``slots``). That lets this
-suite drive the *exact production scheduling code* with a pure-Python
-``FakeEngine`` (no jax, instant "decode") and a manual clock, against an
-independently written slot-state oracle, over >= 50 random action
-sequences per property (deterministic under the hypothesis shim — see
-``tests/hypothesis_shim.py``).
+The front-end's scheduling core (`ServeFrontend.step` + the
+``serve/scheduler.py`` policy layer) is engine-agnostic: it only touches
+the engine's slot surface (``free_slots`` / ``admit`` — or its
+``begin_admit``/``continue_admit`` non-atomic split — / ``decode_step`` /
+``retire`` / ``cancel`` / ``slots``). That lets this suite drive the
+*exact production scheduling code* with a pure-Python ``FakeEngine`` (no
+jax, instant "decode") and a manual clock, against an independently
+written slot-state oracle, over >= 50 random action sequences per
+property (deterministic under the hypothesis shim — see
+``tests/hypothesis_shim.py``). The main lifecycle properties run both
+with atomic admits and with the scheduler's chunked-prefill policy
+(``prefill_chunk``), whose non-atomic PREFILLING state the oracle models
+independently: no decode lane until the prompt is consumed, zero tokens
+kept on mid-prefill expiry/cancel, and no early cache writes.
 
 Invariants checked on every sequence:
   * every submitted request reaches **exactly one** terminal state
@@ -55,6 +61,7 @@ def fake_token(rid: int, i: int) -> int:
 class _FakeSlot:
     def __init__(self):
         self.rid, self.remaining, self.out, self.req = -1, 0, [], None
+        self.pending = None                # prompt tokens left to prefill
 
     @property
     def free(self):
@@ -92,18 +99,48 @@ class FakeEngine:
     def active_count(self):
         return sum(not s.free for s in self.slots)
 
-    def admit(self, req, slot, prefix_cache=None):
+    def decoding_count(self):
+        return sum((not s.free) and s.pending is None for s in self.slots)
+
+    def begin_admit(self, req, slot, prefix_cache=None):
+        """Bind only: the slot is PREFILLING (occupied, zero tokens,
+        skipped by decode) until ``continue_admit`` drains the prompt."""
         s = self.slots[slot]
         assert s.free, f"admit into occupied slot {slot}"
         self.admits += 1
         s.rid, s.req = req.rid, req
-        s.out = [fake_token(req.rid, 0)]          # "prefill" token
-        s.remaining = req.gen - 1
+        s.out = []
+        s.remaining = req.gen
+        s.pending = len(req.tokens)
+
+    def continue_admit(self, slot, budget=None):
+        s = self.slots[slot]
+        assert s.pending is not None, f"continue without begin on {slot}"
+        take = s.pending if budget is None \
+            else min(max(1, int(budget)), s.pending)
+        s.pending -= take
+        if s.pending:
+            return False
+        self._install(slot)
+        return True
+
+    def _install(self, slot):
+        """Prompt consumed: the first token lands. Sharded/recurrent
+        subclasses scatter their cache state here — never earlier, the
+        real engine holds chunk work aside until this point."""
+        s = self.slots[slot]
+        s.out = [fake_token(s.rid, 0)]            # "prefill" token
+        s.remaining = s.req.gen - 1
+        s.pending = None
+
+    def admit(self, req, slot, prefix_cache=None):
+        self.begin_admit(req, slot, prefix_cache=prefix_cache)
+        self.continue_admit(slot)
 
     def decode_step(self):
         retired = []
         for i, s in enumerate(self.slots):
-            if s.free or s.remaining == 0:
+            if s.free or s.pending is not None or s.remaining == 0:
                 continue
             s.out.append(fake_token(s.rid, len(s.out)))
             s.remaining -= 1
@@ -115,7 +152,7 @@ class FakeEngine:
         s = self.slots[slot]
         assert not s.free, f"retire of free slot {slot}"
         comp = _Completion(s.rid, list(s.out))
-        s.rid, s.req, s.remaining = -1, None, 0
+        s.rid, s.req, s.remaining, s.pending = -1, None, 0, None
         return comp
 
     def cancel(self, slot):
@@ -123,7 +160,7 @@ class FakeEngine:
         if s.free:
             raise ValueError(f"cancel of free slot {slot}")
         partial = list(s.out)
-        s.rid, s.req, s.remaining = -1, None, 0
+        s.rid, s.req, s.remaining, s.pending = -1, None, 0, None
         return partial
 
 
@@ -150,16 +187,21 @@ class RecurrentFakeEngine(FakeEngine):
     def _zero():
         return [0] * FAKE_STATE_SIZE
 
-    def admit(self, req, slot, prefix_cache=None):
+    def begin_admit(self, req, slot, prefix_cache=None):
         assert self.state[slot] == self._zero(), \
             f"admit into slot {slot} over stale recurrent state"
-        super().admit(req, slot, prefix_cache=prefix_cache)
-        self.state[slot] = [req.rid + 1, len(req.tokens) + 1] \
+        super().begin_admit(req, slot, prefix_cache=prefix_cache)
+
+    def _install(self, slot):
+        super()._install(slot)
+        s = self.slots[slot]
+        # one wholesale scatter when the (possibly chunked) prefill ends
+        self.state[slot] = [s.rid + 1, len(s.req.tokens) + 1] \
             + [0] * (FAKE_STATE_SIZE - 2)
 
     def decode_step(self):
         stepped = [i for i, s in enumerate(self.slots)
-                   if not s.free and s.remaining > 0]
+                   if not s.free and s.pending is None and s.remaining > 0]
         retired = super().decode_step()
         for i in stepped:                  # the one shared recurrent step
             self.state[i][1] += 1
@@ -277,20 +319,24 @@ class ShardedFakeEngine(_ShardedFakeBase):
     def _blank():
         return [0] * FAKE_LEN
 
-    def admit(self, req, slot, prefix_cache=None):
-        super().admit(req, slot, prefix_cache=prefix_cache)
-        plen = len(req.tokens)
+    def _install(self, slot):
+        super()._install(slot)
+        s = self.slots[slot]
+        plen = len(s.req.tokens)
+        # chunk work is held aside: the prompt's cells land in ONE scatter
+        # on the owning shards when the prefill completes (shard-local by
+        # construction, exactly the real engine's write_slot)
         for key, row, mi in self._owner_devs(slot):
             r = self.dev[key]["rows"][row]
             assert r == self._blank(), \
                 f"admit into slot {slot} over stale kv shard"
             for p in range(plen):
-                r[p] = shard_cell(req.rid, p, mi)
+                r[p] = shard_cell(s.rid, p, mi)
         self._set_pos(slot, plen)
 
     def decode_step(self):
         stepped = [(i, s.rid) for i, s in enumerate(self.slots)
-                   if not s.free and s.remaining > 0]
+                   if not s.free and s.pending is None and s.remaining > 0]
         retired = super().decode_step()
         for slot, rid in stepped:           # one shared sharded scatter
             p = self._pos(slot)
@@ -315,20 +361,21 @@ class ShardedRecurrentFakeEngine(_ShardedFakeBase):
     def _blank():
         return [0] * FAKE_STATE_SIZE
 
-    def admit(self, req, slot, prefix_cache=None):
-        super().admit(req, slot, prefix_cache=prefix_cache)
-        plen = len(req.tokens)
+    def _install(self, slot):
+        super()._install(slot)
+        s = self.slots[slot]
+        plen = len(s.req.tokens)
         for key, row, mi in self._owner_devs(slot):
             r = self.dev[key]["rows"][row]
             assert r == self._blank(), \
                 f"admit into slot {slot} over stale recurrent shard"
-            self.dev[key]["rows"][row] = [req.rid + 1, plen + 1, mi + 1] \
+            self.dev[key]["rows"][row] = [s.rid + 1, plen + 1, mi + 1] \
                 + [0] * (FAKE_STATE_SIZE - 3)
         self._set_pos(slot, plen)
 
     def decode_step(self):
         stepped = [i for i, s in enumerate(self.slots)
-                   if not s.free and s.remaining > 0]
+                   if not s.free and s.pending is None and s.remaining > 0]
         retired = super().decode_step()
         for slot in stepped:                # the one shared recurrent step
             for key, row, _mi in self._owner_devs(slot):
@@ -361,12 +408,14 @@ class Oracle:
     ("Front-end" section) rather than from frontend.py, with plain dicts:
     divergence between the two implementations fails the property."""
 
-    def __init__(self, n_slots, depth, policy):
-        self.depth, self.policy = depth, policy
+    def __init__(self, n_slots, depth, policy, chunk=None):
+        self.depth, self.policy, self.chunk = depth, policy, chunk
         self.free = sorted(range(n_slots))
         self.queue = []                     # rids, arrival order
         self.running = {}                   # rid -> {slot, remaining, ntok,
-                                            #         deadline}
+                                            #         deadline, prefill}
+                                            # prefill: prompt tokens left
+                                            # before the first token exists
         self.final = {}                     # rid -> (status, ntok)
         self.reqs = {}                      # rid -> (gen, plen, deadline)
         self.admit_log = []
@@ -381,18 +430,23 @@ class Oracle:
             self.final[rid] = ("rejected", 0)
 
     def _admit(self, rid, now):
-        gen, _plen, dl = self.reqs[rid]
+        gen, plen, dl = self.reqs[rid]
         if dl is not None and now >= dl:    # dead on arrival: no work
             self.final[rid] = ("expired", 0)
             return
         self.admit_log.append(rid)
         slot = self.free.pop(0)
-        if gen == 1:                        # completes at admit
+        if self.chunk is not None and plen > self.chunk:
+            # chunked admit: one chunk now, the slot is PREFILLING —
+            # occupied, zero tokens, skipped by decode
+            self.running[rid] = dict(slot=slot, remaining=gen, ntok=0,
+                                     deadline=dl, prefill=plen - self.chunk)
+        elif gen == 1:                      # completes at admit
             self.final[rid] = ("done", 1)
             self.free = sorted(self.free + [slot])
         else:
             self.running[rid] = dict(slot=slot, remaining=gen - 1,
-                                     ntok=1, deadline=dl)
+                                     ntok=1, deadline=dl, prefill=0)
 
     def cancel(self, rid):
         if rid in self.final:
@@ -424,11 +478,29 @@ class Oracle:
                        and now >= v["deadline"]]:
             del self.running[rid]
             self.free = sorted(self.free + [r["slot"]])
+            # expiry mid-chunked-prefill keeps ZERO tokens (partial
+            # prefill discarded); ntok is 0 exactly then
             self.final[rid] = ("expired", r["ntok"])
+        # resume chunked prefills, slot order; a prompt that completes
+        # joins this same step's decode; gen==1 frees its slot before
+        # the refill below
+        for rid in sorted((k for k, v in self.running.items()
+                           if v["prefill"]),
+                          key=lambda k: self.running[k]["slot"]):
+            r = self.running[rid]
+            r["prefill"] = max(0, r["prefill"] - self.chunk)
+            if r["prefill"] == 0:
+                r["ntok"], r["remaining"] = 1, self.reqs[rid][0] - 1
+                if r["remaining"] == 0:
+                    del self.running[rid]
+                    self.free = sorted(self.free + [r["slot"]])
+                    self.final[rid] = ("done", 1)
         while self.queue and self.free:
             self._admit(self._pop_queue(), now)
         retired = []
         for rid, r in self.running.items():
+            if r["prefill"]:
+                continue                    # PREFILLING: no decode lane
             r["ntok"] += 1
             r["remaining"] -= 1
             if r["remaining"] == 0:
@@ -447,6 +519,8 @@ class Oracle:
         contamination in the engine fails the comparison."""
         state = [[0] * FAKE_STATE_SIZE for _ in range(n_slots)]
         for rid, r in self.running.items():
+            if r["prefill"]:
+                continue    # mid-chunked-prefill: nothing scattered yet
             state[r["slot"]] = [rid + 1, self.reqs[rid][1] + r["ntok"]] \
                 + [0] * (FAKE_STATE_SIZE - 2)
         return state
@@ -464,8 +538,10 @@ class Oracle:
         d, m = mesh["data"], mesh["model"]
         spp = n_slots // d if n_slots % d == 0 else n_slots
         width = FAKE_LEN if kind == "kv" else FAKE_STATE_SIZE
+        # a PREFILLING slot holds its chunk work aside: its shards stay
+        # blank (and pos 0) until the install scatter
         occ = {r["slot"]: (rid, self.reqs[rid][1], r["ntok"])
-               for rid, r in self.running.items()}
+               for rid, r in self.running.items() if not r["prefill"]}
         pos = [occ[s][1] + occ[s][2] - 1 if s in occ else 0
                for s in range(n_slots)]
         dev = {}
@@ -500,14 +576,17 @@ STATUS_NAME = {Status.DONE: "done", Status.REJECTED: "rejected",
 
 
 def _run_sequence(seed, n_slots, depth, policy, n_actions=18,
-                  deadline_prob=0.35, engine_cls=FakeEngine):
+                  deadline_prob=0.35, engine_cls=FakeEngine, chunk=None):
     """Drive frontend (production code, FakeEngine) and oracle through the
-    same random action sequence; return both plus instrumentation."""
+    same random action sequence; return both plus instrumentation.
+    ``chunk`` turns on the scheduler's chunked-prefill policy — the oracle
+    models the resulting non-atomic admit lifecycle independently."""
     rng = random.Random(seed)
     eng = engine_cls(n_slots)
     clk = ManualClock()
-    fe = ServeFrontend(eng, queue_depth=depth, policy=policy, clock=clk)
-    oracle = Oracle(n_slots, depth, policy)
+    fe = ServeFrontend(eng, queue_depth=depth, policy=policy, clock=clk,
+                       prefill_chunk=chunk)
+    oracle = Oracle(n_slots, depth, policy, chunk=chunk)
 
     terminal_log = []                       # (rid, status) exactly-once log
     orig_finish = fe._finish
@@ -518,14 +597,16 @@ def _run_sequence(seed, n_slots, depth, policy, n_actions=18,
 
     fe._finish = logged_finish
 
+    # spy on begin_admit: atomic admit() delegates to it, so this fires
+    # exactly once per admission in BOTH the atomic and chunked modes
     admit_log = []                          # engine-admitted rids, in order
-    orig_admit = eng.admit
+    orig_begin = eng.begin_admit
 
-    def logged_admit(req, slot, prefix_cache=None):
+    def logged_begin(req, slot, prefix_cache=None):
         admit_log.append(req.rid)
-        orig_admit(req, slot, prefix_cache=prefix_cache)
+        orig_begin(req, slot, prefix_cache=prefix_cache)
 
-    eng.admit = logged_admit
+    eng.begin_admit = logged_begin
 
     rid = 0
     for _ in range(n_actions):
@@ -621,13 +702,19 @@ def _check_invariants(fe, eng, oracle, terminal_log, admit_log):
        n_slots=st.integers(min_value=1, max_value=3),
        depth=st.integers(min_value=0, max_value=4),
        policy=st.sampled_from(("fifo", "spf")),
-       fake=st.sampled_from(("kv", "recurrent")))
-def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy, fake):
+       fake=st.sampled_from(("kv", "recurrent")),
+       chunk=st.sampled_from((None, 1, 2, 3)))
+def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy, fake,
+                                       chunk):
     """>= 50 random action sequences: production scheduler == oracle,
     under both slot-cache contracts (the recurrent fake additionally
-    checks its state vectors against the oracle after every action)."""
+    checks its state vectors against the oracle after every action) and
+    under both atomic admits and the scheduler's chunked-prefill policy
+    (the oracle models the non-atomic PREFILLING lifecycle: no decode
+    lane until the prompt is consumed, zero tokens on mid-prefill expiry
+    or cancel, no slot leaks, exactly-once terminals)."""
     _check_invariants(*_run_sequence(seed, n_slots, depth, policy,
-                                     engine_cls=FAKES[fake]))
+                                     engine_cls=FAKES[fake], chunk=chunk))
 
 
 @settings(max_examples=60)
@@ -636,20 +723,25 @@ def test_slot_lifecycle_matches_oracle(seed, n_slots, depth, policy, fake):
        depth=st.integers(min_value=0, max_value=4),
        policy=st.sampled_from(("fifo", "spf")),
        fake=st.sampled_from(("kv", "recurrent")),
-       mesh_i=st.sampled_from((0, 1)))
+       mesh_i=st.sampled_from((0, 1)),
+       chunk=st.sampled_from((None, 2)))
 def test_sharded_slot_cache_matches_device_oracle(seed, n_slots, depth,
-                                                  policy, fake, mesh_i):
+                                                  policy, fake, mesh_i,
+                                                  chunk):
     """>= 60 random action sequences against the mesh-sharded fakes: the
     full per-device shard dict equals the oracle's projection after every
     single action (shard-shape invariance, owner-only writes, shard-local
     resets, replicated pos parity, capacity parity), under both slot-
     cache contracts and both a (2 data x 2 model) and a model-only mesh.
     n_slots in 1..3 over data=2 covers the divisible-slot-axis split AND
-    the replicated batch-1 rule."""
+    the replicated batch-1 rule. With ``chunk`` set, a PREFILLING slot's
+    shards must stay blank until the single install scatter — chunk
+    writes land shard-local, all at once, never early."""
     mesh = SHARD_MESHES[mesh_i]
     _check_invariants(*_run_sequence(
         seed, n_slots, depth, policy,
-        engine_cls=lambda n: SHARDED_FAKES[fake](n, mesh=mesh)))
+        engine_cls=lambda n: SHARDED_FAKES[fake](n, mesh=mesh),
+        chunk=chunk))
 
 
 def test_sharded_fake_owner_only_writes_and_local_reset():

@@ -272,3 +272,76 @@ def test_real_fleet_kill_streams_token_identical(lm):
             f"rid {h.rid}: routed stream diverged after kill"
     assert router.states[0] is ReplicaState.DOWN
     assert router.rstats["orphaned"] > 0
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill across replica death (serve/scheduler.py over the fleet)
+# ---------------------------------------------------------------------------
+
+def test_chunked_fleet_matches_atomic_streams():
+    """The routed front-end with prefill_chunk set streams byte-identically
+    to atomic admits — including mid-stream PREFILLING slots skipping
+    decode lanes per replica."""
+    engines, router = _fleet(2, 2)
+    fe = ServeFrontend(router, queue_depth=8, clock=ManualClock(),
+                       prefill_chunk=2)
+    hs = [fe.submit(_req(i, plen=3 + 2 * i, gen=3 + i)) for i in range(4)]
+    for _ in range(128):
+        if not fe.step():
+            break
+    for i, h in enumerate(hs):
+        assert h.status is Status.DONE
+        assert h.tokens == _stream(i, 3 + i), f"rid {i}"
+    assert all(v.free for v in router.vslots)
+    assert sum(e.stats["chunk_steps"] for e in engines) > 0
+
+
+def test_replica_death_mid_chunked_prefill_reprefills_from_prompt():
+    """The tentpole's re-dispatch rule: a slot orphaned mid-chunked-prefill
+    has ZERO delivered tokens, so the survivor re-prefills from the full
+    prompt — greedy determinism keeps the stream byte-identical."""
+    engines, router = _fleet(2, 1)
+    clk = ManualClock()
+    fe = ServeFrontend(router, queue_depth=8, clock=clk, prefill_chunk=2)
+    h0 = fe.submit(_req(0, plen=9, gen=4))   # lands replica 0, PREFILLING
+    h1 = fe.submit(_req(1, plen=2, gen=6))   # lands replica 1, decoding
+    assert h0.status is Status.RUNNING and h0.tokens == []
+    router.kill(0)                           # death mid-chunked-prefill
+    for _ in range(128):
+        if not fe.step():
+            break
+    assert h0.status is Status.DONE and h0.tokens == _stream(0, 4)
+    assert h1.status is Status.DONE and h1.tokens == _stream(1, 6)
+    assert router.rstats["orphaned"] == 1
+    assert router.rstats["redispatches"] == 1
+    # the re-prefill was whole-prompt on the survivor: replica 1 admitted
+    # both requests, and no partial chunk state crossed replicas
+    assert engines[1].stats["admits"] == 2
+    assert all(v.free for v in router.vslots)
+
+
+def test_real_fleet_chunked_kill_streams_token_identical(lm):
+    """Real engines, chunked prefill, replica killed mid-trace: every
+    stream equals the single-engine unchunked reference — chunking and
+    re-dispatch compose without a single token of drift."""
+    model, params = lm
+    trace = synthetic_trace(n=5, seed=7, prompt_range=(4, 8),
+                            gen_range=(3, 6), vocab=model.cfg.vocab_size)
+    ref = ServeEngine(model, params, n_slots=2, max_len=48).run(trace)
+
+    engines = [ServeEngine(model, params, n_slots=2, max_len=48)
+               for _ in range(2)]
+    router = ReplicaRouter(engines)
+    fe = ServeFrontend(router, queue_depth=8, prefill_chunk=3)
+    handles = [fe.submit(r) for r in trace]
+    fe.step()
+    fe.step()
+    router.kill(0)
+    for _ in range(256):
+        if not fe.step():
+            break
+    for h in handles:
+        assert h.status is Status.DONE, f"rid {h.rid} ended {h.status}"
+        assert h.tokens == [int(t) for t in ref[h.rid].tokens], \
+            f"rid {h.rid}: chunked routed stream diverged after kill"
+    assert router.states[0] is ReplicaState.DOWN
